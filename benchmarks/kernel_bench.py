@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: device fingerprint path vs host SHA-256.
+
+On this CPU container the 'device' path times the jitted jnp oracle (the
+Pallas kernel is validated in interpret mode; its TPU perf is bounded by
+VPU throughput — see EXPERIMENTS.md §Perf notes)."""
+
+from __future__ import annotations
+
+import hashlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+MB = 1024 * 1024
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    if hasattr(r, "block_until_ready"):
+        r.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(rows_out: list[str]) -> None:
+    n_bytes = 32 * MB
+    data = np.random.default_rng(0).bytes(n_bytes)
+
+    # host path: SHA-256 over 512 KB chunks
+    def host_fp():
+        return [hashlib.sha256(data[o:o + 512 * 1024]).digest()
+                for o in range(0, n_bytes, 512 * 1024)]
+
+    t_host = _time(host_fp)
+    rows_out.append(f"kernel_host_sha256_32MB,{t_host*1e6:.0f},MBps={n_bytes/t_host/1e6:.0f}")
+
+    # device path: vectorized fingerprint (jnp oracle, jitted)
+    words = jnp.asarray(np.frombuffer(data, np.uint32)).reshape(64, -1)
+    fp_jit = jax.jit(ref.fingerprint_chunks)
+    t_dev = _time(fp_jit, words)
+    rows_out.append(f"kernel_device_fp_32MB,{t_dev*1e6:.0f},MBps={n_bytes/t_dev/1e6:.0f}")
+
+    # CDC window hashes
+    tvals = jnp.asarray(np.frombuffer(data[: 4 * MB], np.uint8).astype(np.uint32))
+    cdc_jit = jax.jit(ref.cdc_hashes)
+    t_cdc = _time(cdc_jit, tvals)
+    rows_out.append(f"kernel_cdc_hash_4MB,{t_cdc*1e6:.0f},MBps={4*MB/t_cdc/1e6:.0f}")

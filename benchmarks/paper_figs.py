@@ -1,0 +1,179 @@
+"""Paper reproduction benchmarks — one function per table/figure.
+
+Each returns a list of CSV rows (name, us_per_call, derived). `derived`
+carries the figure's y-axis (modeled MB/s or savings %). Workloads are
+scaled-down FIO equivalents (exact op/byte accounting, modeled time —
+see simtime.py and DESIGN.md §6.4).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    CentralDedupCluster,
+    ChunkingSpec,
+    DedupCluster,
+    DiskLocalDedupCluster,
+    NoDedupCluster,
+)
+from repro.data import DedupWorkload, make_dedup_objects
+
+from benchmarks import simtime as ST
+
+MB = 1024 * 1024
+
+
+def _run_writes(cluster, objs):
+    t0 = time.perf_counter()
+    for name, data in objs:
+        cluster.write_object(name, data)
+    if hasattr(cluster, "tick"):
+        cluster.tick(2)
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------- Fig 4(a) --
+def fig4a_chunk_size(rows_out: list[str]) -> None:
+    """Bandwidth vs chunk size at 0% dedup, 8 client threads."""
+    for chunk_kb in [64, 128, 256, 512, 1024]:
+        w = DedupWorkload(object_size=1 * MB, n_objects=48, dedup_pct=0.0,
+                          block_size=4096, seed=1)
+        objs = make_dedup_objects(w)
+        logical = sum(len(d) for _, d in objs)
+        ch = ChunkingSpec("fixed", chunk_kb * 1024)
+
+        base = NoDedupCluster.create(4)
+        wall_b = _run_writes(base, objs)
+        t_base = ST.modeled_time_nodedup(base)
+
+        cw = DedupCluster.create(4, chunking=ch)
+        wall_c = _run_writes(cw, objs)
+        t_cw = ST.modeled_time_clusterwide(cw)
+
+        ce = CentralDedupCluster.create(4, chunking=ch)
+        wall_e = _run_writes(ce, objs)
+        t_ce = ST.modeled_time_central(ce)
+
+        rows_out.append(f"fig4a_baseline_{chunk_kb}KB,{wall_b*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_base):.0f}")
+        rows_out.append(f"fig4a_clusterwide_{chunk_kb}KB,{wall_c*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_cw):.0f}")
+        rows_out.append(f"fig4a_central_{chunk_kb}KB,{wall_e*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_ce):.0f}")
+
+
+# ---------------------------------------------------------------- Fig 4(b) --
+def fig4b_dedup_ratio(rows_out: list[str]) -> None:
+    """Bandwidth vs dedup percentage at 512 KB chunks, 8 threads."""
+    for pct in [0, 25, 50, 75, 100]:
+        w = DedupWorkload(object_size=1 * MB, n_objects=48, dedup_pct=float(pct),
+                          block_size=512 * 1024, pool_blocks=8, seed=2)
+        objs = make_dedup_objects(w)
+        logical = sum(len(d) for _, d in objs)
+        ch = ChunkingSpec("fixed", 512 * 1024)
+
+        cw = DedupCluster.create(4, chunking=ch)
+        wall_c = _run_writes(cw, objs)
+        t_cw = ST.modeled_time_clusterwide(cw)
+
+        ce = CentralDedupCluster.create(4, chunking=ch)
+        wall_e = _run_writes(ce, objs)
+        t_ce = ST.modeled_time_central(ce)
+
+        rows_out.append(
+            f"fig4b_clusterwide_dedup{pct},{wall_c*1e6/len(objs):.1f},"
+            f"modeled_MBps={ST.mbps(logical, t_cw):.0f};savings={100*cw.space_savings():.0f}%")
+        rows_out.append(
+            f"fig4b_central_dedup{pct},{wall_e*1e6/len(objs):.1f},"
+            f"modeled_MBps={ST.mbps(logical, t_ce):.0f};savings={100*ce.space_savings():.0f}%")
+
+
+# ---------------------------------------------------------------- Fig 5(a) --
+def fig5a_scalability(rows_out: list[str]) -> None:
+    """Bandwidth vs number of client threads (512 KB chunks)."""
+    ch = ChunkingSpec("fixed", 512 * 1024)
+    for threads in [1, 4, 8, 16, 32]:
+        w = DedupWorkload(object_size=1 * MB, n_objects=6 * threads, dedup_pct=25.0,
+                          block_size=512 * 1024, pool_blocks=8, seed=3)
+        objs = make_dedup_objects(w)
+        logical = sum(len(d) for _, d in objs)
+
+        cw = DedupCluster.create(4, chunking=ch)
+        wall_c = _run_writes(cw, objs)
+        t_cw = ST.modeled_time_clusterwide(cw)
+
+        ce = CentralDedupCluster.create(4, chunking=ch)
+        wall_e = _run_writes(ce, objs)
+        t_ce = ST.modeled_time_central(ce, n_clients=threads)
+
+        rows_out.append(f"fig5a_clusterwide_{threads}cl,{wall_c*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_cw):.0f}")
+        rows_out.append(f"fig5a_central_{threads}cl,{wall_e*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_ce):.0f}")
+
+
+# ---------------------------------------------------------------- Fig 5(b) --
+def fig5b_consistency_variants(rows_out: list[str]) -> None:
+    """Async tagged consistency vs sync chunk-flag vs sync object-flag."""
+    tb = ST.DEFAULT
+    for chunk_kb in [128, 256, 512, 1024]:
+        w = DedupWorkload(object_size=1 * MB, n_objects=48, dedup_pct=0.0,
+                          block_size=4096, seed=4)
+        objs = make_dedup_objects(w)
+        logical = sum(len(d) for _, d in objs)
+        ch = ChunkingSpec("fixed", chunk_kb * 1024)
+
+        cw = DedupCluster.create(4, chunking=ch)
+        wall = _run_writes(cw, objs)
+        n_chunks = sum(nd.stats.chunk_writes for nd in cw.nodes.values())
+
+        t_async = ST.modeled_time_clusterwide(cw)                      # flags async: free
+        t_obj = ST.modeled_time_clusterwide(cw, extra_serial_s=len(objs) * tb.flag_io_s)
+        t_chunk = ST.modeled_time_clusterwide(cw, extra_serial_s=n_chunks * tb.flag_io_s)
+
+        rows_out.append(f"fig5b_async_{chunk_kb}KB,{wall*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_async):.0f}")
+        rows_out.append(f"fig5b_objectsync_{chunk_kb}KB,{wall*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_obj):.0f}")
+        rows_out.append(f"fig5b_chunksync_{chunk_kb}KB,{wall*1e6/len(objs):.1f},"
+                        f"modeled_MBps={ST.mbps(logical, t_chunk):.0f}")
+
+
+# ----------------------------------------------- beyond-paper: fp-first ----
+def fp_first_network(rows_out: list[str]) -> None:
+    """Beyond-paper optimization: probe the CIT with a 64 B fingerprint
+    before shipping chunk bytes. The paper always ships bytes (its Fig 4b
+    explanation); fp-first trades one RTT for dedup_pct of the network."""
+    w = DedupWorkload(object_size=1 * MB, n_objects=32, dedup_pct=75.0,
+                      block_size=512 * 1024, pool_blocks=8, seed=9)
+    objs = make_dedup_objects(w)
+    ch = ChunkingSpec("fixed", 512 * 1024)
+    for fp_first in (False, True):
+        c = DedupCluster.create(4, chunking=ch, send_fingerprint_first=fp_first)
+        wall = _run_writes(c, objs)
+        name = "fpfirst" if fp_first else "shipbytes"
+        rows_out.append(
+            f"netopt_{name},{wall*1e6/len(objs):.1f},"
+            f"net_MB={c.stats.net_bytes/1e6:.1f};savings={100*c.space_savings():.0f}%")
+
+
+# ----------------------------------------------------------------- Table 2 --
+def table2_space_savings(rows_out: list[str]) -> None:
+    """Space savings (%) vs number of disks, 100% dedup ratio."""
+    for n_disks in [1, 2, 4, 8]:
+        # pool sized so cluster-wide savings land at the paper's ~85%
+        w = DedupWorkload(object_size=256 * 1024, n_objects=96, dedup_pct=100.0,
+                          block_size=4096, pool_blocks=900, seed=5)
+        objs = make_dedup_objects(w)
+        ch = ChunkingSpec("fixed", 4096)
+
+        cw = DedupCluster.create(n_disks, chunking=ch)
+        wall_c = _run_writes(cw, objs)
+        dl = DiskLocalDedupCluster.create(n_disks, chunking=ch)
+        wall_d = _run_writes(dl, objs)
+
+        rows_out.append(f"table2_clusterwide_{n_disks}d,{wall_c*1e6/len(objs):.1f},"
+                        f"savings={100*cw.space_savings():.0f}%")
+        rows_out.append(f"table2_disklocal_{n_disks}d,{wall_d*1e6/len(objs):.1f},"
+                        f"savings={100*dl.space_savings():.0f}%")

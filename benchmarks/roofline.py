@@ -1,0 +1,71 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str, tag: str = "") -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}{('__' + tag) if tag else ''}.json")):
+        r = json.loads(f.read_text())
+        if tag == "" and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_table(recs: list[dict], md: bool = False) -> str:
+    hdr = ["arch", "shape", "status", "chips", "params",
+           "t_comp_ms", "t_mem_ms", "t_coll_ms", "bound",
+           "useful", "roofline", "peakGB/dev"]
+    rows = [hdr]
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r["status"], "-", "-", "-", "-", "-",
+                         r.get("reason", r.get("error", ""))[:40], "-", "-", "-"])
+            continue
+        ro = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], "ok", str(r["n_chips"]),
+            f"{r['n_params']/1e9:.2f}B",
+            f"{ro['t_compute_s']*1e3:.2f}",
+            f"{ro['t_memory_s']*1e3:.2f}",
+            f"{ro['t_collective_s']*1e3:.2f}",
+            ro["bottleneck"],
+            f"{ro['useful_flops_ratio']:.2f}",
+            f"{ro['roofline_fraction']:.3f}",
+            f"{(r['memory']['peak_bytes'] or 0)/1e9:.2f}",
+        ])
+    if md:
+        out = ["| " + " | ".join(rows[0]) + " |",
+               "|" + "---|" * len(rows[0])]
+        out += ["| " + " | ".join(r) + " |" for r in rows[1:]]
+        return "\n".join(out)
+    w = [max(len(r[i]) for r in rows) for i in range(len(hdr))]
+    return "\n".join("  ".join(c.ljust(w[i]) for i, c in enumerate(r)) for r in rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    print(fmt_table(recs, md=args.md))
+    okc = sum(r["status"] == "ok" for r in recs)
+    sk = sum(r["status"] == "skipped" for r in recs)
+    fl = sum(r["status"] == "fail" for r in recs)
+    print(f"\n{args.mesh}: ok={okc} skipped={sk} failed={fl}")
+
+
+if __name__ == "__main__":
+    main()

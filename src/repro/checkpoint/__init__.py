@@ -1,0 +1,3 @@
+from repro.checkpoint.dedup_ckpt import CheckpointConfig, DedupCheckpointer
+
+__all__ = ["CheckpointConfig", "DedupCheckpointer"]

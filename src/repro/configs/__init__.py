@@ -1,0 +1,38 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.llava_next_mistral_7b import CONFIG as _llava
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.qwen1_5_110b import CONFIG as _qwen110b
+from repro.configs.qwen2_5_32b import CONFIG as _qwen32b
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen_moe
+from repro.configs.recurrentgemma_2b import CONFIG as _rgemma
+from repro.configs.whisper_tiny import CONFIG as _whisper
+
+ARCHS: dict[str, ModelConfig] = {
+    c.arch_id: c
+    for c in [
+        _mamba2,
+        _minicpm3,
+        _qwen32b,
+        _gemma3,
+        _qwen110b,
+        _rgemma,
+        _llama4,
+        _qwen_moe,
+        _whisper,
+        _llava,
+    ]
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeSpec", "get_config", "shape_applicable"]

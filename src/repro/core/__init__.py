@@ -1,0 +1,49 @@
+"""Cluster-wide deduplication for shared-nothing storage — the paper's core.
+
+Public API:
+    DedupCluster.create(n_nodes, replicas=..., chunking=...)
+    cluster.write_object / read_object / delete_object
+    cluster.add_node / remove_node / scrub / run_gc / tick
+    ClusterMap, ChunkingSpec, Fingerprint
+"""
+
+from repro.core.chunking import ChunkingSpec, chunk_object
+from repro.core.cluster import (
+    DedupCluster,
+    ReadError,
+    TransactionAbort,
+    WriteError,
+)
+from repro.core.baselines import (
+    CentralDedupCluster,
+    DiskLocalDedupCluster,
+    NoDedupCluster,
+)
+from repro.core.dmshard import CITEntry, DMShard, INVALID, OMAPEntry, VALID
+from repro.core.fingerprint import Fingerprint, chain_fp, name_fp, object_fp, sha256_fp
+from repro.core.placement import ClusterMap, place, primary
+
+__all__ = [
+    "ChunkingSpec",
+    "chunk_object",
+    "DedupCluster",
+    "CentralDedupCluster",
+    "DiskLocalDedupCluster",
+    "NoDedupCluster",
+    "ReadError",
+    "TransactionAbort",
+    "WriteError",
+    "CITEntry",
+    "DMShard",
+    "INVALID",
+    "VALID",
+    "OMAPEntry",
+    "Fingerprint",
+    "chain_fp",
+    "name_fp",
+    "object_fp",
+    "sha256_fp",
+    "ClusterMap",
+    "place",
+    "primary",
+]

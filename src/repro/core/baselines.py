@@ -1,0 +1,195 @@
+"""Baselines the paper compares against.
+
+* CentralDedupCluster — one deduplication metadata server: every fingerprint
+  lookup and every chunking/fingerprinting operation funnels through it
+  (paper Fig 4b/5a baseline). The central op counter is the contention model
+  used by benchmarks/fig5a.
+* DiskLocalDedupCluster — per-node (per-disk/BtrFS-style) dedup only: no
+  cluster-wide duplicate detection (paper Table 2 baseline). Objects land by
+  name hash; duplicates on different nodes are NOT found.
+* NoDedupCluster — baseline storage system, straight-through writes
+  (paper Fig 4a "Baseline Ceph").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.chunking import ChunkingSpec, chunk_object
+from repro.core.cluster import ClusterStats, ReadError, WriteError
+from repro.core.dmshard import OMAPEntry
+from repro.core.fingerprint import Fingerprint, name_fp, object_fp, sha256_fp
+from repro.core.node import StorageNode
+from repro.core.placement import ClusterMap, place
+
+
+@dataclass
+class CentralDedupCluster:
+    """All dedup metadata + chunking/fingerprinting on ONE server."""
+
+    cmap: ClusterMap
+    chunking: ChunkingSpec = field(default_factory=ChunkingSpec)
+    nodes: dict[str, StorageNode] = field(default_factory=dict)
+    stats: ClusterStats = field(default_factory=ClusterStats)
+    now: int = 0
+    # central metadata structures (the bottleneck)
+    central_cit: dict[Fingerprint, tuple[int, str]] = field(default_factory=dict)  # fp -> (refcount, node)
+    central_omap: dict[str, OMAPEntry] = field(default_factory=dict)
+    central_ops: int = 0          # serialized ops through the central server
+    central_cpu_bytes: int = 0    # bytes chunked+fingerprinted centrally
+
+    @classmethod
+    def create(cls, n_nodes: int, chunking: ChunkingSpec | None = None) -> "CentralDedupCluster":
+        ids = tuple(f"oss{i}" for i in range(n_nodes))
+        c = cls(cmap=ClusterMap(1, ids), chunking=(chunking or ChunkingSpec()).normalized())
+        for nid in ids:
+            c.nodes[nid] = StorageNode(nid)
+        return c
+
+    def write_object(self, name: str, data: bytes) -> Fingerprint:
+        self.stats.logical_bytes_written += len(data)
+        # client -> central server (everything funnels through it)
+        self.stats.net_bytes += len(data)
+        self.central_cpu_bytes += len(data)
+        chunks = chunk_object(data, self.chunking)
+        fps = [sha256_fp(c) for c in chunks]
+        for fp, chunk in zip(fps, chunks):
+            self.central_ops += 1               # serialized CIT lookup
+            self.stats.control_msgs += 1
+            hit = self.central_cit.get(fp)
+            if hit is not None:
+                rc, nid = hit
+                self.central_cit[fp] = (rc + 1, nid)
+                self.nodes[nid].stats.dedup_hits += 1
+                continue
+            nid = place(fp, self.cmap, 1)[0]
+            node = self.nodes[nid]
+            node.chunk_store[fp] = chunk
+            node.stats.disk_bytes_written += len(chunk)
+            node.stats.chunk_writes += 1
+            self.stats.net_bytes += len(chunk)  # central -> storage node
+            self.central_cit[fp] = (1, nid)
+        self.central_ops += 1                   # OMAP write
+        self.central_omap[name] = OMAPEntry(name, object_fp(fps), fps, len(data))
+        self.stats.writes_ok += 1
+        return self.central_omap[name].object_fp
+
+    def read_object(self, name: str) -> bytes:
+        self.central_ops += 1
+        e = self.central_omap.get(name)
+        if e is None:
+            raise ReadError(name)
+        out = []
+        for fp in e.chunk_fps:
+            self.central_ops += 1
+            rc_nid = self.central_cit.get(fp)
+            if rc_nid is None:
+                raise ReadError(f"central CIT lost {fp}")
+            out.append(self.nodes[rc_nid[1]].chunk_store[fp])
+            self.stats.net_bytes += len(out[-1])
+        self.stats.reads_ok += 1
+        return b"".join(out)
+
+    def unique_bytes_stored(self) -> int:
+        return sum(n.stored_bytes() for n in self.nodes.values())
+
+    def space_savings(self) -> float:
+        logical = self.stats.logical_bytes_written
+        return 1.0 - self.unique_bytes_stored() / logical if logical else 0.0
+
+
+@dataclass
+class DiskLocalDedupCluster:
+    """Per-node dedup only (paper Table 2 'Disk-based Dedup Approach')."""
+
+    cmap: ClusterMap
+    chunking: ChunkingSpec = field(default_factory=ChunkingSpec)
+    nodes: dict[str, StorageNode] = field(default_factory=dict)
+    stats: ClusterStats = field(default_factory=ClusterStats)
+    now: int = 0
+
+    @classmethod
+    def create(cls, n_nodes: int, chunking: ChunkingSpec | None = None) -> "DiskLocalDedupCluster":
+        ids = tuple(f"oss{i}" for i in range(n_nodes))
+        c = cls(cmap=ClusterMap(1, ids), chunking=(chunking or ChunkingSpec()).normalized())
+        for nid in ids:
+            c.nodes[nid] = StorageNode(nid)
+        return c
+
+    def write_object(self, name: str, data: bytes) -> Fingerprint:
+        self.stats.logical_bytes_written += len(data)
+        nid = place(name_fp(name), self.cmap, 1)[0]   # object placed by name
+        node = self.nodes[nid]
+        self.stats.net_bytes += len(data)
+        chunks = chunk_object(data, self.chunking)
+        fps = [sha256_fp(c) for c in chunks]
+        for fp, chunk in zip(fps, chunks):
+            node.stats.cit_lookups += 1
+            if node.shard.cit_lookup(fp) is not None:   # local-only dedup
+                node.shard.cit_addref(fp)
+                node.stats.dedup_hits += 1
+                continue
+            node.shard.cit_insert(fp, len(chunk), self.now)
+            node.shard.cit_addref(fp)
+            node.shard.cit_set_flag(fp, 1, self.now)
+            node.chunk_store[fp] = chunk
+            node.stats.disk_bytes_written += len(chunk)
+            node.stats.chunk_writes += 1
+        node.shard.omap_put(OMAPEntry(name, object_fp(fps), fps, len(data)))
+        self.stats.writes_ok += 1
+        return object_fp(fps)
+
+    def read_object(self, name: str) -> bytes:
+        nid = place(name_fp(name), self.cmap, 1)[0]
+        node = self.nodes[nid]
+        e = node.shard.omap_get(name)
+        if e is None:
+            raise ReadError(name)
+        data = b"".join(node.chunk_store[fp] for fp in e.chunk_fps)
+        self.stats.reads_ok += 1
+        return data
+
+    def unique_bytes_stored(self) -> int:
+        return sum(n.stored_bytes() for n in self.nodes.values())
+
+    def space_savings(self) -> float:
+        logical = self.stats.logical_bytes_written
+        return 1.0 - self.unique_bytes_stored() / logical if logical else 0.0
+
+
+@dataclass
+class NoDedupCluster:
+    """Baseline storage system without any deduplication (Fig 4a 'Baseline')."""
+
+    cmap: ClusterMap
+    nodes: dict[str, StorageNode] = field(default_factory=dict)
+    stats: ClusterStats = field(default_factory=ClusterStats)
+    objects: dict[str, str] = field(default_factory=dict)  # name -> node
+
+    @classmethod
+    def create(cls, n_nodes: int) -> "NoDedupCluster":
+        ids = tuple(f"oss{i}" for i in range(n_nodes))
+        c = cls(cmap=ClusterMap(1, ids))
+        for nid in ids:
+            c.nodes[nid] = StorageNode(nid)
+        return c
+
+    def write_object(self, name: str, data: bytes) -> None:
+        self.stats.logical_bytes_written += len(data)
+        nid = place(name_fp(name), self.cmap, 1)[0]
+        node = self.nodes[nid]
+        self.stats.net_bytes += len(data)
+        node.chunk_store[name_fp(name)] = data
+        node.stats.disk_bytes_written += len(data)
+        self.stats.writes_ok += 1
+
+    def read_object(self, name: str) -> bytes:
+        nid = place(name_fp(name), self.cmap, 1)[0]
+        data = self.nodes[nid].chunk_store.get(name_fp(name))
+        if data is None:
+            raise ReadError(name)
+        self.stats.reads_ok += 1
+        return data
+
+    def unique_bytes_stored(self) -> int:
+        return sum(n.stored_bytes() for n in self.nodes.values())

@@ -1,0 +1,99 @@
+"""Object chunking — host path.
+
+The paper splits every object into small *fixed-size* chunks on the primary
+OSS (512 KB default in the evaluation). We additionally provide windowed
+content-defined chunking (CDC) whose boundary rule matches the Pallas CDC
+kernel in ``repro.kernels.cdc`` (boundary at i iff gear-window-hash(i) & mask
+== 0), so host and device agree on boundaries.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+DEFAULT_CHUNK_SIZE = 512 * 1024
+
+# --- windowed gear hash (must match kernels/ref.py::cdc_window_hash) --------
+_GEAR_MULT = 0x9E3779B1          # 32-bit golden-ratio multiplier
+_WINDOW = 32                     # bytes of context per boundary decision
+
+
+def _gear_table() -> list[int]:
+    # Deterministic pseudo-random byte->u32 table (splitmix-ish), no RNG dep.
+    tbl = []
+    x = 0x243F6A88
+    for _ in range(256):
+        x = (x + 0x9E3779B9) & 0xFFFFFFFF
+        z = x
+        z = ((z ^ (z >> 16)) * 0x85EBCA6B) & 0xFFFFFFFF
+        z = ((z ^ (z >> 13)) * 0xC2B2AE35) & 0xFFFFFFFF
+        z = z ^ (z >> 16)
+        tbl.append(z)
+    return tbl
+
+
+GEAR_TABLE = _gear_table()
+
+
+def window_hash_at(data: bytes, i: int) -> int:
+    """Gear hash of the W bytes ending at (and including) position i.
+    Depends on at most _WINDOW bytes of context => parallelizable."""
+    h = 0
+    lo = max(0, i - _WINDOW + 1)
+    for b in data[lo : i + 1]:
+        h = ((h << 1) + GEAR_TABLE[b]) & 0xFFFFFFFF
+    return h
+
+
+@dataclass(frozen=True)
+class ChunkingSpec:
+    kind: str = "fixed"              # "fixed" | "cdc"
+    chunk_size: int = DEFAULT_CHUNK_SIZE   # fixed size / CDC target size
+    min_size: int = 0                # cdc only
+    max_size: int = 0                # cdc only
+
+    def normalized(self) -> "ChunkingSpec":
+        if self.kind == "cdc":
+            mn = self.min_size or self.chunk_size // 4
+            mx = self.max_size or self.chunk_size * 4
+            return ChunkingSpec("cdc", self.chunk_size, mn, mx)
+        return self
+
+
+def chunk_fixed(data: bytes, chunk_size: int = DEFAULT_CHUNK_SIZE) -> Iterator[bytes]:
+    for off in range(0, len(data), chunk_size):
+        yield data[off : off + chunk_size]
+
+
+def chunk_cdc(data: bytes, spec: ChunkingSpec) -> Iterator[bytes]:
+    """Windowed-gear CDC. Boundary after position i when h(i) & mask == 0,
+    subject to [min_size, max_size]. mask targets ~chunk_size averages."""
+    spec = spec.normalized()
+    mask = (1 << max(1, (spec.chunk_size).bit_length() - 1)) - 1
+    start = 0
+    i = start + spec.min_size
+    n = len(data)
+    while i < n:
+        if (window_hash_at(data, i) & mask) == 0 or (i - start + 1) >= spec.max_size:
+            yield data[start : i + 1]
+            start = i + 1
+            i = start + spec.min_size
+        else:
+            i += 1
+    if start < n:
+        yield data[start:]
+
+
+def chunk_object(data: bytes, spec: ChunkingSpec | None = None) -> list[bytes]:
+    spec = (spec or ChunkingSpec()).normalized()
+    if spec.kind == "fixed":
+        out = list(chunk_fixed(data, spec.chunk_size))
+    elif spec.kind == "cdc":
+        out = list(chunk_cdc(data, spec))
+    else:
+        raise ValueError(f"unknown chunking kind {spec.kind!r}")
+    if data and not out:
+        raise AssertionError("non-empty object produced no chunks")
+    assert b"".join(out) == data, "chunking must be lossless"
+    return out

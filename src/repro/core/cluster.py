@@ -1,0 +1,454 @@
+"""DedupCluster — the shared-nothing cluster with cluster-wide deduplication.
+
+Implements the paper's complete write/read I/O transactions (Fig 3), the
+fingerprint-routed chunk placement (Fig 2), storage rebalancing on topology
+change (Fig 1b, made metadata-free by content placement), K-way replication,
+failure injection, and byte-accurate network/disk accounting for the
+benchmark models.
+
+Transaction flow (write):
+  client --(object bytes)--> primary OSS (by name hash)
+  primary: chunk + fingerprint, then per chunk:
+      target(s) = place(chunk_fp, map)  --(chunk bytes)--> target
+      target: CIT lookup -> dedup_hit | repair | store (flag flips async)
+  when all chunk acks arrive: primary writes OMAP entry -> txn complete.
+
+A fault injector callback may crash nodes / abort between any two steps,
+which is how the crash-consistency tests drive the paper's failure windows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.core.chunking import ChunkingSpec, chunk_object
+from repro.core.dmshard import OMAPEntry
+from repro.core.fingerprint import Fingerprint, name_fp, object_fp, sha256_fp
+from repro.core.node import ChunkMissing, NodeDown, StorageNode
+from repro.core.placement import ClusterMap, place
+
+# fault injector signature: (event, context-dict) -> None. May raise
+# TransactionAbort or call cluster.crash_node() to model failures.
+FaultInjector = Callable[[str, dict], None]
+
+CONTROL_MSG_BYTES = 64  # modeled size of a lookup/ack/refcount message
+
+
+class TransactionAbort(RuntimeError):
+    pass
+
+
+class WriteError(RuntimeError):
+    pass
+
+
+class ReadError(RuntimeError):
+    pass
+
+
+@dataclass
+class ClusterStats:
+    logical_bytes_written: int = 0
+    net_bytes: int = 0                 # payload bytes crossing the network
+    control_msgs: int = 0              # lookup/ack/refcount unicasts
+    lookup_unicasts: int = 0
+    lookup_broadcasts: int = 0         # always 0 for us; used by baselines
+    writes_ok: int = 0
+    writes_failed: int = 0
+    reads_ok: int = 0
+    rebalance_bytes_moved: int = 0
+    rebalance_chunks_moved: int = 0
+
+
+@dataclass
+class DedupCluster:
+    cmap: ClusterMap
+    chunking: ChunkingSpec = field(default_factory=ChunkingSpec)
+    nodes: dict[str, StorageNode] = field(default_factory=dict)
+    stats: ClusterStats = field(default_factory=ClusterStats)
+    now: int = 0
+    fault_injector: FaultInjector | None = None
+    send_fingerprint_first: bool = False   # beyond-paper: lookup-before-send
+    _txn_counter: int = 0
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def create(
+        cls,
+        n_nodes: int,
+        replicas: int = 1,
+        chunking: ChunkingSpec | None = None,
+        **kw,
+    ) -> "DedupCluster":
+        ids = tuple(f"oss{i}" for i in range(n_nodes))
+        cmap = ClusterMap(epoch=1, nodes=ids, replicas=replicas)
+        c = cls(cmap=cmap, chunking=(chunking or ChunkingSpec()).normalized(), **kw)
+        for nid in ids:
+            c.nodes[nid] = StorageNode(nid)
+        return c
+
+    def node(self, nid: str) -> StorageNode:
+        return self.nodes[nid]
+
+    def crash_node(self, nid: str) -> None:
+        self.nodes[nid].crash()
+
+    def restart_node(self, nid: str) -> None:
+        self.nodes[nid].restart()
+
+    def tick(self, dt: int = 1) -> None:
+        """Advance simulated time; drain async consistency queues."""
+        for _ in range(dt):
+            self.now += 1
+            for n in self.nodes.values():
+                n.tick(self.now)
+
+    def run_gc(self) -> dict[str, list[Fingerprint]]:
+        return {nid: n.run_gc(self.now) for nid, n in self.nodes.items()}
+
+    # -------------------------------------------------------------- fault hook
+    def _fault(self, event: str, **ctx) -> None:
+        if self.fault_injector is not None:
+            self.fault_injector(event, {"now": self.now, **ctx})
+
+    # ------------------------------------------------------------ placement
+    def chunk_targets(self, fp: Fingerprint) -> list[str]:
+        return place(fp, self.cmap)
+
+    def omap_targets(self, name: str) -> list[str]:
+        return place(name_fp(name), self.cmap)
+
+    def _live(self, targets: list[str]) -> list[str]:
+        return [t for t in targets if self.nodes[t].alive]
+
+    # ----------------------------------------------------------------- write
+    def write_object(self, name: str, data: bytes) -> Fingerprint:
+        """Complete write transaction. Returns the object fingerprint."""
+        self._txn_counter += 1
+        txn = self._txn_counter
+        self.stats.logical_bytes_written += len(data)
+
+        # 1. client -> primary OSS by object-name hash (full object travels).
+        omap_nodes = self._live(self.omap_targets(name))
+        if not omap_nodes:
+            self.stats.writes_failed += 1
+            raise WriteError(f"no live OMAP target for {name!r}")
+        primary = omap_nodes[0]
+        self.stats.net_bytes += len(data)
+        self._fault("primary_selected", name=name, primary=primary, txn=txn)
+
+        # 2. primary chunks + fingerprints the object.
+        chunks = chunk_object(data, self.chunking)
+        fps = [sha256_fp(c) for c in chunks]
+
+        # Idempotence: rewriting an identical object is a no-op; rewriting
+        # different content under an existing name replaces it (old refs
+        # released first so refcounts stay exact).
+        prev = self._omap_lookup(name)
+        if prev is not None:
+            if prev.object_fp == object_fp(fps):
+                self.stats.writes_ok += 1
+                return prev.object_fp
+            self.delete_object(name)
+
+        # 3. per-chunk fingerprint-routed unicasts (parallel in real life;
+        #    deterministic order here).
+        acked: list[tuple[Fingerprint, list[str]]] = []
+        try:
+            for i, (fp, chunk) in enumerate(zip(fps, chunks)):
+                self._fault("before_chunk_op", name=name, index=i, fp=fp, txn=txn)
+                written_on = self._write_chunk(primary, fp, chunk, txn)
+                if not written_on:
+                    raise WriteError(f"chunk {i} of {name!r}: no live target")
+                acked.append((fp, written_on))
+                self._fault("after_chunk_op", name=name, index=i, fp=fp, txn=txn)
+
+            # 4. all chunks acked -> OMAP entry on primary (+ replicas).
+            self._fault("before_omap", name=name, txn=txn)
+            if not self.nodes[primary].alive:
+                raise NodeDown(primary)
+            ofp = object_fp(fps)
+            entry = OMAPEntry(name=name, object_fp=ofp, chunk_fps=list(fps), size=len(data))
+            wrote_omap = False
+            for t in self._live(self.omap_targets(name)):
+                self.nodes[t].shard.omap_put(
+                    OMAPEntry(entry.name, entry.object_fp, list(entry.chunk_fps), entry.size)
+                )
+                wrote_omap = True
+            if not wrote_omap:
+                raise WriteError(f"no live OMAP target for {name!r} at commit")
+        except (NodeDown, TransactionAbort, WriteError) as e:
+            # Failed object transaction: best-effort rollback of refcounts we
+            # took. Unreachable decrements leave flag-0 garbage for GC — the
+            # paper's failure model.
+            for fp, on in acked:
+                for t in on:
+                    node = self.nodes[t]
+                    if node.alive:
+                        node.decref_chunk(fp, self.now)
+                        self.stats.control_msgs += 1
+            self.stats.writes_failed += 1
+            raise WriteError(f"write {name!r} failed: {e}") from e
+
+        self.stats.writes_ok += 1
+        return ofp
+
+    def _write_chunk(self, primary: str, fp: Fingerprint, chunk: bytes, txn: int) -> list[str]:
+        """Route one chunk to its replica set. Returns nodes that took a ref."""
+        written_on: list[str] = []
+        for t in self.chunk_targets(fp):
+            node = self.nodes[t]
+            if not node.alive:
+                continue
+            # fingerprint lookup is part of the same unicast (no broadcast!)
+            self.stats.lookup_unicasts += 1
+            self.stats.control_msgs += 1
+            if self.send_fingerprint_first:
+                # beyond-paper: 64B fp probe first; ship bytes only on miss.
+                e = node.cit_entry(fp)
+                hit = e is not None and e.is_valid()
+                if not hit and t != primary:
+                    self.stats.net_bytes += len(chunk)
+            elif t != primary:
+                # paper-faithful: chunk bytes always travel to the target.
+                self.stats.net_bytes += len(chunk)
+            node.receive_chunk(fp, chunk, self.now, txn)
+            written_on.append(t)
+        return written_on
+
+    def write_object_by_ref(self, name: str, src_name: str) -> Fingerprint | None:
+        """Reference-only write: create object `name` with the same layout as
+        `src_name`, incrementing chunk refcounts without moving data
+        (checkpointer device-fp fast path). Fails (None) if any chunk is
+        invalid and unrepairable, in which case the caller falls back to a
+        full write."""
+        src = self._omap_lookup(src_name)
+        if src is None:
+            return None
+        taken: list[tuple[Fingerprint, list[str]]] = []
+        ok = True
+        for fp in src.chunk_fps:
+            on: list[str] = []
+            for t in self._live(self.chunk_targets(fp)):
+                node = self.nodes[t]
+                self.stats.lookup_unicasts += 1
+                self.stats.control_msgs += 1
+                e = node.cit_entry(fp)
+                if e is None:
+                    continue
+                if not e.is_valid():
+                    # paper §2.4 consistency check via stat
+                    if not node.has_chunk(fp):
+                        continue
+                    node.shard.cit_set_flag(fp, 1, self.now)
+                    node.stats.repairs += 1
+                node.shard.cit_addref(fp)
+                on.append(t)
+            if not on:
+                ok = False
+                break
+            taken.append((fp, on))
+        if not ok:
+            for fp, on in taken:
+                for t in on:
+                    self.nodes[t].decref_chunk(fp, self.now)
+            return None
+        entry = OMAPEntry(name, src.object_fp, list(src.chunk_fps), src.size)
+        wrote = False
+        for t in self._live(self.omap_targets(name)):
+            self.nodes[t].shard.omap_put(
+                OMAPEntry(entry.name, entry.object_fp, list(entry.chunk_fps), entry.size)
+            )
+            self.stats.control_msgs += 1
+            wrote = True
+        if not wrote:
+            for fp, on in taken:
+                for t in on:
+                    self.nodes[t].decref_chunk(fp, self.now)
+            return None
+        self.stats.writes_ok += 1
+        self.stats.logical_bytes_written += src.size
+        return entry.object_fp
+
+    # ------------------------------------------------------------------ read
+    def read_object(self, name: str) -> bytes:
+        entry = self._omap_lookup(name)
+        if entry is None:
+            raise ReadError(f"object {name!r} not found")
+        parts: list[bytes] = []
+        for fp in entry.chunk_fps:
+            parts.append(self._read_chunk(fp))
+        data = b"".join(parts)
+        if object_fp(entry.chunk_fps) != entry.object_fp:
+            raise ReadError(f"object {name!r}: layout fingerprint mismatch")
+        self.stats.reads_ok += 1
+        return data
+
+    def _omap_lookup(self, name: str) -> OMAPEntry | None:
+        for t in self._live(self.omap_targets(name)):
+            self.stats.control_msgs += 1
+            e = self.nodes[t].shard.omap_get(name)
+            if e is not None:
+                return e
+        return None
+
+    def _read_chunk(self, fp: Fingerprint) -> bytes:
+        last: Exception | None = None
+        for t in self.chunk_targets(fp):
+            node = self.nodes[t]
+            if not node.alive:
+                continue
+            try:
+                data = node.read_chunk(fp, self.now)
+                self.stats.net_bytes += len(data)
+                return data
+            except ChunkMissing as e:
+                last = e
+        raise ReadError(f"chunk {fp} unreadable on all replicas: {last}")
+
+    # ---------------------------------------------------------------- delete
+    def delete_object(self, name: str) -> bool:
+        entry = self._omap_lookup(name)
+        if entry is None:
+            return False
+        for t in self._live(self.omap_targets(name)):
+            self.nodes[t].shard.omap_delete(name)
+            self.stats.control_msgs += 1
+        for fp in entry.chunk_fps:
+            for t in self._live(self.chunk_targets(fp)):
+                self.nodes[t].decref_chunk(fp, self.now)
+                self.stats.control_msgs += 1
+        return True
+
+    # ------------------------------------------------------------- rebalance
+    def set_map(self, new_map: ClusterMap) -> None:
+        """Topology change + storage rebalance (paper Fig 1b).
+
+        Content placement means we only *move* chunks; no dedup-metadata
+        location rewrite happens anywhere (the paper's key win). CIT entries
+        travel with their chunks; OMAP entries move by name hash.
+        """
+        for nid in new_map.nodes:
+            if nid not in self.nodes:
+                self.nodes[nid] = StorageNode(nid)
+        old = self.cmap
+        self.cmap = new_map
+
+        for nid, node in list(self.nodes.items()):
+            if not node.alive:
+                continue
+            # --- migrate chunks + their CIT entries --------------------------
+            for fp in list(node.chunk_store.keys()):
+                targets = place(fp, new_map)
+                if nid in targets:
+                    continue
+                data = node.chunk_store.pop(fp)
+                entry = node.shard.cit_lookup(fp)
+                if entry is not None:
+                    node.shard.cit_remove(fp)
+                moved = False
+                for t in self._live(targets):
+                    dst = self.nodes[t]
+                    if fp not in dst.chunk_store:
+                        dst.chunk_store[fp] = data
+                        dst.stats.disk_bytes_written += len(data)
+                        self.stats.net_bytes += len(data)
+                        moved = True
+                    if entry is not None and dst.shard.cit_lookup(fp) is None:
+                        ne = dst.shard.cit_insert(fp, entry.size, self.now)
+                        ne.refcount = entry.refcount
+                        ne.flag = entry.flag
+                        ne.invalid_since = entry.invalid_since
+                if moved:
+                    self.stats.rebalance_chunks_moved += 1
+                    self.stats.rebalance_bytes_moved += len(data)
+            # --- stray CIT entries without local bytes (tombstones) ---------
+            for fp in list(node.shard.cit.keys()):
+                targets = place(fp, new_map)
+                if nid in targets:
+                    continue
+                entry = node.shard.cit_lookup(fp)
+                node.shard.cit_remove(fp)
+                for t in self._live(targets):
+                    dst = self.nodes[t]
+                    if dst.shard.cit_lookup(fp) is None and entry is not None:
+                        ne = dst.shard.cit_insert(fp, entry.size, self.now)
+                        ne.refcount = entry.refcount
+                        ne.flag = entry.flag
+                        ne.invalid_since = entry.invalid_since
+            # --- migrate OMAP entries by object-name hash --------------------
+            for name in list(node.shard.omap.keys()):
+                targets = place(name_fp(name), new_map)
+                if nid in targets:
+                    continue
+                e = node.shard.omap_delete(name)
+                assert e is not None
+                for t in self._live(targets):
+                    self.nodes[t].shard.omap_put(
+                        OMAPEntry(e.name, e.object_fp, list(e.chunk_fps), e.size)
+                    )
+                    self.stats.net_bytes += CONTROL_MSG_BYTES
+        _ = old
+
+    def add_node(self, weight: float = 1.0) -> str:
+        nid = f"oss{len(self.nodes)}"
+        self.set_map(self.cmap.with_node(nid, weight))
+        return nid
+
+    def remove_node(self, nid: str) -> None:
+        self.set_map(self.cmap.without_node(nid))
+
+    def scrub(self) -> int:
+        """Re-replication repair: ensure every chunk is on all live targets.
+        Returns number of chunk copies restored."""
+        restored = 0
+        holders: dict[Fingerprint, list[str]] = {}
+        for nid, node in self.nodes.items():
+            if not node.alive:
+                continue
+            for fp in node.chunk_store:
+                holders.setdefault(fp, []).append(nid)
+        for fp, have in holders.items():
+            src = self.nodes[have[0]]
+            entry = src.shard.cit_lookup(fp)
+            for t in self._live(self.chunk_targets(fp)):
+                dst = self.nodes[t]
+                if fp in dst.chunk_store:
+                    continue
+                dst.chunk_store[fp] = src.chunk_store[fp]
+                dst.stats.disk_bytes_written += len(src.chunk_store[fp])
+                self.stats.net_bytes += len(src.chunk_store[fp])
+                if dst.shard.cit_lookup(fp) is None and entry is not None:
+                    ne = dst.shard.cit_insert(fp, entry.size, self.now)
+                    ne.refcount = entry.refcount
+                    ne.flag = entry.flag
+                restored += 1
+        return restored
+
+    # --------------------------------------------------------------- metrics
+    def unique_bytes_stored(self) -> int:
+        seen: set[Fingerprint] = set()
+        total = 0
+        for node in self.nodes.values():
+            for fp, data in node.chunk_store.items():
+                if fp not in seen:
+                    seen.add(fp)
+                    total += len(data)
+        return total
+
+    def physical_bytes_stored(self) -> int:
+        return sum(n.stored_bytes() for n in self.nodes.values())
+
+    def space_savings(self) -> float:
+        logical = self.stats.logical_bytes_written
+        if logical == 0:
+            return 0.0
+        return 1.0 - self.unique_bytes_stored() / logical
+
+    def dedup_ratio(self) -> float:
+        u = self.unique_bytes_stored()
+        return self.stats.logical_bytes_written / u if u else 0.0
+
+    def chunk_distribution(self) -> dict[str, int]:
+        return {nid: len(n.chunk_store) for nid, n in self.nodes.items()}

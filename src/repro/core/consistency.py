@@ -1,0 +1,67 @@
+"""Asynchronous tagged-consistency manager (paper §2.4).
+
+Every incoming write I/O *registers* with the per-node consistency manager.
+Once the data I/O completes, the manager flips the CIT commit flag
+INVALID -> VALID **asynchronously** — no transaction lock, no journal.
+
+Determinism adaptation (DESIGN.md §6.1): instead of a daemon thread, pending
+flips live in an explicit queue with a due-time; the cluster's ``tick()``
+drains due events on *alive* nodes. A node crash discards the queue — exactly
+the window the paper's design tolerates: the chunk bytes are on disk but the
+flag never flips, so the chunk either ages into garbage (GC) or is repaired by
+the consistency check on the next duplicate write / read.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.dmshard import DMShard, VALID
+from repro.core.fingerprint import Fingerprint
+
+
+@dataclass(frozen=True)
+class PendingFlip:
+    fp: Fingerprint
+    due: int            # sim time at which the flip may be applied
+    txn_id: int         # transaction that registered the write
+
+
+@dataclass
+class ConsistencyManager:
+    """Volatile (lost on crash) per-node flag-flip queue."""
+
+    async_delay: int = 1           # sim-ticks between data-I/O done and flip
+    queue: list[PendingFlip] = field(default_factory=list)
+    flips_applied: int = 0
+    flips_lost_to_crash: int = 0
+
+    def register(self, fp: Fingerprint, now: int, txn_id: int) -> None:
+        self.queue.append(PendingFlip(fp, now + self.async_delay, txn_id))
+
+    def drain(self, shard: DMShard, now: int) -> int:
+        """Apply all due flips. Returns number applied."""
+        due = [p for p in self.queue if p.due <= now]
+        self.queue = [p for p in self.queue if p.due > now]
+        n = 0
+        for p in due:
+            e = shard.cit_lookup(p.fp)
+            if e is None:
+                continue  # entry GCed/removed before the flip landed
+            if e.refcount == 0:
+                # The registering transaction aborted and rolled its
+                # reference back — "I/O transaction completes" never
+                # happened for this write, so the flag must stay INVALID
+                # and the chunk ages into garbage.
+                continue
+            shard.cit_set_flag(p.fp, VALID, now)
+            n += 1
+        self.flips_applied += n
+        return n
+
+    def crash(self) -> None:
+        self.flips_lost_to_crash += len(self.queue)
+        self.queue.clear()
+
+    def pending(self) -> int:
+        return len(self.queue)

@@ -1,0 +1,101 @@
+"""DM-Shard: the per-storage-server deduplication metadata shard.
+
+Two persistent structures, exactly as in the paper (§2.2):
+
+* OMAP — Object Map: object name -> (object fingerprint, ordered chunk-fp
+  list). Holds the layout/reconstruction logic; lives on the OSS selected by
+  hashing the *object name*.
+* CIT — Chunk Information Table: chunk fingerprint -> (refcount, commit flag,
+  size). Holds the performance-sensitive dedup metadata; lives on the OSS
+  selected by hashing the *chunk content* — so every lookup is a unicast.
+
+Commit flag semantics (tagged consistency, paper §2.4):
+  flag == INVALID (0): fingerprint may not point at valid stored content —
+      either the async flip hasn't happened yet, the txn crashed, or the
+      refcount dropped to zero (tombstone; our reuse of the same machinery).
+  flag == VALID (1): chunk bytes are guaranteed present on this server.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.fingerprint import Fingerprint
+
+INVALID = 0
+VALID = 1
+
+
+@dataclass
+class CITEntry:
+    refcount: int = 0
+    flag: int = INVALID
+    size: int = 0
+    # Bookkeeping for GC aging (sim time when the flag last became INVALID).
+    invalid_since: int | None = None
+
+    def is_valid(self) -> bool:
+        return self.flag == VALID
+
+
+@dataclass
+class OMAPEntry:
+    name: str
+    object_fp: Fingerprint
+    chunk_fps: list[Fingerprint]
+    size: int
+
+
+@dataclass
+class DMShard:
+    """One shard; hosted by exactly one StorageNode, replicated like data."""
+
+    omap: dict[str, OMAPEntry] = field(default_factory=dict)
+    cit: dict[Fingerprint, CITEntry] = field(default_factory=dict)
+
+    # --- CIT ops (unicast targets of fingerprint-routed I/O) ---------------
+    def cit_lookup(self, fp: Fingerprint) -> CITEntry | None:
+        return self.cit.get(fp)
+
+    def cit_insert(self, fp: Fingerprint, size: int, now: int) -> CITEntry:
+        if fp in self.cit:
+            raise KeyError(f"CIT entry exists for {fp}")
+        e = CITEntry(refcount=0, flag=INVALID, size=size, invalid_since=now)
+        self.cit[fp] = e
+        return e
+
+    def cit_set_flag(self, fp: Fingerprint, flag: int, now: int) -> None:
+        e = self.cit[fp]
+        if e.flag != flag:
+            e.flag = flag
+            e.invalid_since = now if flag == INVALID else None
+
+    def cit_addref(self, fp: Fingerprint, delta: int = 1) -> int:
+        e = self.cit[fp]
+        e.refcount += delta
+        if e.refcount < 0:
+            raise AssertionError(f"negative refcount for {fp}")
+        return e.refcount
+
+    def cit_remove(self, fp: Fingerprint) -> None:
+        del self.cit[fp]
+
+    # --- OMAP ops (object-name-routed I/O) ----------------------------------
+    def omap_put(self, entry: OMAPEntry) -> None:
+        self.omap[entry.name] = entry
+
+    def omap_get(self, name: str) -> OMAPEntry | None:
+        return self.omap.get(name)
+
+    def omap_delete(self, name: str) -> OMAPEntry | None:
+        return self.omap.pop(name, None)
+
+    # --- introspection -------------------------------------------------------
+    def stored_bytes(self) -> int:
+        return sum(e.size for e in self.cit.values())
+
+    def valid_bytes(self) -> int:
+        return sum(e.size for e in self.cit.values() if e.is_valid())
+
+    def invalid_fps(self) -> list[Fingerprint]:
+        return [fp for fp, e in self.cit.items() if e.flag == INVALID]

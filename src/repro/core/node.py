@@ -1,0 +1,155 @@
+"""StorageNode — one shared-nothing object storage server (OSD/OSS).
+
+Persistent across crash/restart: the chunk store (disk) and the DM-Shard
+(stored like a normal replicated object, per paper §2.2).
+Volatile (lost on crash): the consistency manager's pending flag flips —
+losing them is precisely the failure mode the tagged-consistency design
+tolerates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.consistency import ConsistencyManager
+from repro.core.dmshard import DMShard, INVALID, VALID, CITEntry
+from repro.core.fingerprint import Fingerprint, sha256_fp
+from repro.core.gc import GarbageCollector
+
+
+@dataclass
+class NodeStats:
+    disk_bytes_written: int = 0
+    disk_bytes_read: int = 0
+    chunk_writes: int = 0
+    dedup_hits: int = 0
+    cit_lookups: int = 0
+    consistency_checks: int = 0
+    repairs: int = 0
+
+
+@dataclass
+class StorageNode:
+    node_id: str
+    alive: bool = True
+    chunk_store: dict[Fingerprint, bytes] = field(default_factory=dict)   # "disk"
+    shard: DMShard = field(default_factory=DMShard)
+    cm: ConsistencyManager = field(default_factory=ConsistencyManager)
+    gc: GarbageCollector = field(default_factory=GarbageCollector)
+    stats: NodeStats = field(default_factory=NodeStats)
+
+    # ------------------------------------------------------------------ life
+    def crash(self) -> None:
+        """Power-fail: drop volatile state. Disk + DM-Shard survive."""
+        self.alive = False
+        self.cm.crash()
+
+    def restart(self) -> None:
+        self.alive = True
+
+    def _require_alive(self) -> None:
+        if not self.alive:
+            raise NodeDown(self.node_id)
+
+    # ------------------------------------------------------------- chunk I/O
+    def receive_chunk(self, fp: Fingerprint, data: bytes, now: int, txn_id: int) -> str:
+        """Fingerprint-routed chunk write (paper fig 2, OSS 4). Returns one of
+        'dedup_hit' | 'repaired' | 'restored' | 'stored'."""
+        self._require_alive()
+        self.stats.cit_lookups += 1
+        entry = self.shard.cit_lookup(fp)
+
+        if entry is not None and entry.is_valid():
+            # Duplicate write, valid flag: refcount increment granted.
+            self.shard.cit_addref(fp)
+            self.stats.dedup_hits += 1
+            return "dedup_hit"
+
+        if entry is not None:  # exists, flag INVALID -> consistency check
+            self.stats.consistency_checks += 1
+            if fp in self.chunk_store:  # stat() says bytes are present
+                self.shard.cit_set_flag(fp, VALID, now)
+                self.shard.cit_addref(fp)
+                self.stats.repairs += 1
+                return "repaired"
+            # Bytes missing: store content first, then flip (async).
+            self._disk_write(fp, data)
+            self.shard.cit_addref(fp)
+            self.cm.register(fp, now, txn_id)
+            self.stats.repairs += 1
+            return "restored"
+
+        # Unique chunk: store with INVALID flag; flip is async (paper §2.4).
+        self.shard.cit_insert(fp, len(data), now)
+        self._disk_write(fp, data)
+        self.shard.cit_addref(fp)
+        self.cm.register(fp, now, txn_id)
+        return "stored"
+
+    def read_chunk(self, fp: Fingerprint, now: int) -> bytes:
+        self._require_alive()
+        data = self.chunk_store.get(fp)
+        if data is None:
+            raise ChunkMissing(self.node_id, fp)
+        if sha256_fp(data) != fp and fp.namespace == "sha256":
+            raise ChunkCorrupt(self.node_id, fp)
+        self.stats.disk_bytes_read += len(data)
+        entry = self.shard.cit_lookup(fp)
+        if entry is not None and entry.flag == INVALID and entry.refcount > 0:
+            # Read-path consistency check: bytes verified present & referenced.
+            self.shard.cit_set_flag(fp, VALID, now)
+            self.stats.repairs += 1
+        return data
+
+    def decref_chunk(self, fp: Fingerprint, now: int) -> None:
+        self._require_alive()
+        entry = self.shard.cit_lookup(fp)
+        if entry is None:
+            return
+        rc = self.shard.cit_addref(fp, -1)
+        if rc == 0:
+            # Tombstone through the same tagged machinery: flag invalid,
+            # GC ages it out; a re-reference before GC repairs it back.
+            self.shard.cit_set_flag(fp, INVALID, now)
+
+    def has_chunk(self, fp: Fingerprint) -> bool:
+        return fp in self.chunk_store
+
+    def cit_entry(self, fp: Fingerprint) -> CITEntry | None:
+        return self.shard.cit_lookup(fp)
+
+    # ----------------------------------------------------------------- local
+    def _disk_write(self, fp: Fingerprint, data: bytes) -> None:
+        self.chunk_store[fp] = data
+        self.stats.disk_bytes_written += len(data)
+        self.stats.chunk_writes += 1
+
+    def tick(self, now: int) -> None:
+        if self.alive:
+            self.cm.drain(self.shard, now)
+
+    def run_gc(self, now: int) -> list[Fingerprint]:
+        if not self.alive:
+            return []
+        return self.gc.run(self.shard, self.chunk_store, now)
+
+    def stored_bytes(self) -> int:
+        return sum(len(v) for v in self.chunk_store.values())
+
+
+class NodeDown(RuntimeError):
+    def __init__(self, node_id: str):
+        super().__init__(f"storage node {node_id} is down")
+        self.node_id = node_id
+
+
+class ChunkMissing(RuntimeError):
+    def __init__(self, node_id: str, fp: Fingerprint):
+        super().__init__(f"chunk {fp} missing on {node_id}")
+        self.node_id, self.fp = node_id, fp
+
+
+class ChunkCorrupt(RuntimeError):
+    def __init__(self, node_id: str, fp: Fingerprint):
+        super().__init__(f"chunk {fp} corrupt on {node_id}")
+        self.node_id, self.fp = node_id, fp

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DedupWorkload,
+    SyntheticLMData,
+    make_dedup_objects,
+)
+
+__all__ = ["DedupWorkload", "SyntheticLMData", "make_dedup_objects"]

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    activation_sharding,
+    current_rules,
+    param_sharding,
+    shard,
+    use_sharding_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "activation_sharding",
+    "current_rules",
+    "param_sharding",
+    "shard",
+    "use_sharding_rules",
+]

@@ -1,0 +1,210 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"d_model", "heads", "d_ff", "vocab", "experts", ...). A ShardingRules table
+maps logical names onto mesh axes; `shard(x, *logical)` applies a
+with_sharding_constraint when a rules context is active and is a no-op
+otherwise (single-device smoke tests).
+
+Default production mapping (DESIGN.md §3):
+  batch   -> ("pod", "data")      # DP over pods and the data axis
+  embed_in/d_ff/heads/vocab -> "model"   # TP
+  stacked-layer param leading axis -> None (scan axis)
+  fsdp    -> "data"               # FSDP: weight matrices additionally
+                                  # sharded over the data axis on d_model
+  experts -> "model"              # EP: experts live on the TP axis
+  seq     -> None for train; "data" for long-context decode (B=1)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = str | tuple[str, ...] | None
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict[str, Axis] = field(default_factory=dict)
+    axis_sizes: dict[str, int] = field(default_factory=dict)
+
+    def axis(self, logical: str | None) -> Axis:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*(self.axis(name) for name in logical))
+
+    def with_overrides(self, **kw: Axis) -> "ShardingRules":
+        return ShardingRules({**self.rules, **kw}, self.axis_sizes)
+
+    def axis_size(self, axis: Axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, str):
+            return self.axis_sizes.get(axis, 1)
+        n = 1
+        for a in axis:
+            n *= self.axis_sizes.get(a, 1)
+        return n
+
+    def guard_spec(self, spec: P, shape: tuple[int, ...]) -> P:
+        """Drop mesh axes that do not divide the corresponding dim, and drop
+        duplicate uses of a mesh axis (each axis may shard one dim only)."""
+        out = []
+        used: set[str] = set()
+        for i, axis in enumerate(spec):
+            if axis is None or i >= len(shape):
+                out.append(None)
+                continue
+            if shape[i] % self.axis_size(axis) != 0:
+                out.append(None)
+                continue
+            names = (axis,) if isinstance(axis, str) else tuple(axis)
+            if any(n in used for n in names):
+                out.append(None)
+                continue
+            used.update(names)
+            out.append(axis)
+        return P(*out)
+
+
+def make_rules(
+    *,
+    data_axes: Axis = ("pod", "data"),
+    model_axis: Axis = "model",
+    fsdp_axis: Axis = "data",
+    seq_axis: Axis = None,
+    kv_seq_axis: Axis = None,
+    expert_axis: Axis = "model",
+) -> ShardingRules:
+    return ShardingRules(
+        {
+            # activations
+            "batch": data_axes,
+            "seq": seq_axis,
+            "kv_seq": kv_seq_axis,
+            # scan-carry residual stream between block groups; sharding this
+            # over "model" = sequence parallelism for the remat-saved buffers
+            "residual_seq": None,
+            "d_model": None,
+            "act_d_ff": model_axis,
+            "act_heads": model_axis,
+            "act_vocab": model_axis,
+            "act_experts": expert_axis,
+            "act_state": None,
+            # params
+            "embed_vocab": model_axis,
+            "embed_d": fsdp_axis,
+            "w_in": fsdp_axis,        # d_model fan-in dim of matrices
+            "w_out": model_axis,      # sharded output dim (heads*hd / d_ff)
+            "w_in2": model_axis,      # fan-in that is already TP-sharded
+            "w_out2": fsdp_axis,      # projection back to d_model
+            "experts": expert_axis,   # leading experts dim of MoE params
+            "layers": None,           # scan-stacked leading axis
+            "heads": model_axis,
+            "state": None,
+            "norm": None,
+        }
+    )
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(rules: ShardingRules | None):
+    prev = current_rules()
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate activation x with logical axes; no-op without a rules ctx.
+    Axes that don't divide the dimension are dropped (e.g. 6 whisper heads
+    on a 16-way model axis)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.guard_spec(rules.spec(*logical), x.shape)
+    if all(a is None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_sharding(logical: tuple[str | None, ...]) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(*logical)
+
+
+def activation_sharding(*logical: str | None) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(*logical)
+
+
+# -------------------------------------------------------------------------
+# Parameter-spec inference: path heuristics + divisibility guard. Covers the
+# whole model zoo (dense/MLA/MoE/SSM/RG-LRU/enc-dec) and the optimizer state
+# mirrors (mu/nu/master share leaf paths with params).
+# -------------------------------------------------------------------------
+
+_DOWN_PROJ_PARENTS = {"down", "wo", "out_proj"}
+
+
+def infer_param_spec(path: tuple[str, ...], shape: tuple[int, ...], rules: ShardingRules) -> P:
+    keys = [k for k in path if not k.isdigit()]
+    last = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) >= 2 else ""
+
+    def base() -> tuple[Axis, ...]:
+        r = rules.rules
+        if last == "table":                       # embedding (V, D)
+            return (r.get("embed_vocab"), r.get("embed_d"))
+        if last in ("gate", "up") and parent == "experts":   # (E, D, F)
+            return (r.get("experts"), r.get("w_in"), None)
+        if last == "down" and parent == "experts":           # (E, F, D)
+            return (r.get("experts"), None, r.get("w_out2"))
+        if last == "conv_w":                      # (K, C)
+            return (None, r.get("w_out"))
+        if last == "w" and parent in _DOWN_PROJ_PARENTS:     # (f, D)
+            return (r.get("w_in2"), r.get("w_out2"))
+        if last == "w":                           # generic up-proj (D, f)
+            return (r.get("w_in"), r.get("w_out"))
+        if last == "b" and parent not in _DOWN_PROJ_PARENTS:
+            return (r.get("w_out"),)
+        return tuple(None for _ in shape)
+
+    spec = list(base())
+    # stacked leading axes (scan groups / layer stacks): pad on the left
+    while len(spec) < len(shape):
+        spec.insert(0, rules.rules.get("layers"))
+    spec = spec[: len(shape)]
+    return rules.guard_spec(P(*spec), shape)
+
+
+def param_specs_for_tree(tree, rules: ShardingRules):
+    """Map a pytree of ShapeDtypeStructs/arrays -> pytree of PartitionSpec."""
+
+    def leaf_spec(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", str(p))) for p in path)
+        keys = tuple(str(k) for k in keys)
+        return infer_param_spec(keys, tuple(leaf.shape), rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: windowed gear-hash CDC boundary detection.
+
+GPU/CPU CDC rolls a hash byte-serially — useless on a vector unit. The TPU
+adaptation (DESIGN.md §2) exploits that a *windowed* gear hash at position i
+depends only on the previous W=32 bytes:
+
+    h_i = sum_{k=0}^{W-1} table[byte_{i-k}] << k        (uint32 wrap)
+
+so every position is independent: the kernel computes W shifted vector adds
+per tile — pure VPU work, no sequential dependency. The wrapper does the
+256-entry gear-table gather in jnp (cheap, one take()) and hands the kernel a
+uint32 stream; each tile carries a W-1 halo on the left.
+
+VMEM: tile (8, TL+31) u32 in + (8, TL) u32 out; with TL=2048 that is
+~0.6 MB per step — double-buffered easily.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import WINDOW
+
+TILE_ROWS = 8          # sublane dim
+TILE_LEN = 2048        # lane dim per row
+
+
+def _cdc_kernel(t_ref, out_ref):
+    """t_ref: (R, TL + WINDOW - 1) halo'd table values; out: (R, TL)."""
+    t = t_ref[...].astype(jnp.uint32)
+    tl = out_ref.shape[1]
+    h = jnp.zeros(out_ref.shape, dtype=jnp.uint32)
+    # k = 0 (newest byte) lives at halo offset WINDOW-1.
+    for k in range(WINDOW):
+        seg = jax.lax.dynamic_slice_in_dim(t, WINDOW - 1 - k, tl, axis=1)
+        h = h + (seg << jnp.uint32(k))
+    out_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_len"))
+def cdc_hashes_pallas(
+    tvals: jnp.ndarray, *, interpret: bool = False, tile_len: int = TILE_LEN
+) -> jnp.ndarray:
+    """(n,) uint32 gear-table values -> (n,) uint32 window hashes.
+
+    Bit-identical to ref.cdc_hashes (short windows at the stream head
+    included, via zero halo).
+    """
+    assert tvals.ndim == 1
+    n = tvals.shape[0]
+    rows = TILE_ROWS
+    tl = min(tile_len, max(128, n))
+    per_row = tl
+    n_rows = -(-n // per_row)
+    n_rows_pad = (-n_rows) % rows
+    total_rows = n_rows + n_rows_pad
+
+    flat = jnp.pad(tvals.astype(jnp.uint32), (0, total_rows * per_row - n))
+    body = flat.reshape(total_rows, per_row)
+    # Halo: last WINDOW-1 values of the previous row (zero for row 0).
+    halo_src = body[:, -(WINDOW - 1):]
+    halo = jnp.concatenate(
+        [jnp.zeros((1, WINDOW - 1), jnp.uint32), halo_src[:-1]], axis=0
+    )
+    haloed = jnp.concatenate([halo, body], axis=1)       # (rows_t, TL+W-1)
+
+    grid = (total_rows // rows,)
+    out = pl.pallas_call(
+        _cdc_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, per_row + WINDOW - 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, per_row), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((total_rows, per_row), jnp.uint32),
+        interpret=interpret,
+    )(haloed)
+    return out.reshape(-1)[:n]
+
+
+def cdc_boundaries_pallas(
+    tvals: jnp.ndarray, mask: int, *, interpret: bool = False
+) -> jnp.ndarray:
+    return (cdc_hashes_pallas(tvals, interpret=interpret) & jnp.uint32(mask)) == 0

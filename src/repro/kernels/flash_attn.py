@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+The JAX-level chunked attention (repro.models.layers.chunked_attention) is
+the portable implementation the framework lowers everywhere; this kernel is
+its TPU-native twin for the serving/prefill hot path: one fused kernel per
+(batch x head, query-block) grid cell, K/V streamed from VMEM, running
+max/denominator in registers — no (S, S) scores ever materialized in HBM.
+
+Blocking / VMEM budget (v5e ~16 MB/core):
+    q block: (BLK_Q, hd) bf16            = 256x128x2   =  64 KB
+    k,v:     (S_kv, hd) bf16 each        = 2xS_kv x256 B
+    acc/m/l: (BLK_Q, hd + 2) fp32        ~ 132 KB
+K/V-resident blocking covers S_kv <= ~24k; past that the wrapper falls back
+to the JAX chunked path (whose lax.scan keeps HBM traffic identical
+asymptotically). GQA is zero-copy: the kv BlockSpec index_map folds the
+query head onto its kv group.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_Q = 256
+BLK_KV = 512
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
+                  blk_kv, s_kv):
+    """Grid cell: one (batch*head, q-block). K/V fully resident in VMEM."""
+    q = q_ref[0].astype(jnp.float32) * scale              # (BQ, hd)
+    bq, hd = q.shape
+    i = pl.program_id(1)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, blk_kv), 0)
+
+    m = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, hd), jnp.float32)
+
+    n_kv = s_kv // blk_kv
+    for j in range(n_kv):                                  # static unroll
+        k_blk = k_ref[0, j * blk_kv : (j + 1) * blk_kv, :].astype(jnp.float32)
+        v_blk = v_ref[0, j * blk_kv : (j + 1) * blk_kv, :].astype(jnp.float32)
+        s = q @ k_blk.T                                    # (BQ, BKV)
+        kpos = j * blk_kv + jax.lax.broadcasted_iota(jnp.int32, (bq, blk_kv), 1)
+        ok = jnp.ones((bq, blk_kv), bool)
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window > 0:
+            ok = ok & (kpos > qpos - window)
+        s = jnp.where(ok, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v_blk
+        m = m_new
+
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "blk_q", "blk_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,             # (B, Sq, H, hd)
+    k: jnp.ndarray,             # (B, Skv, K, hd)
+    v: jnp.ndarray,             # (B, Skv, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    blk_q: int = BLK_Q,
+    blk_kv: int = BLK_KV,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    rep = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bq = min(blk_q, sq)
+    bkv = min(blk_kv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, skv, hd)
+
+    def kv_index(bh, i):
+        # zero-copy GQA: query head bh -> its kv group
+        return (bh // h * kh + (bh % h) // rep, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            blk_kv=bkv, s_kv=skv,
+        ),
+        grid=(b * h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, skv, hd), kv_index),
+            pl.BlockSpec((1, skv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,135 @@
+"""Public jit'd wrappers over the dedup kernels.
+
+On TPU these call the Pallas kernels compiled; everywhere else they run the
+kernels in interpret mode (bit-identical) or fall back to the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunking import GEAR_TABLE
+from repro.core.fingerprint import Fingerprint, device_fp
+from repro.kernels import ref
+from repro.kernels.cdc import cdc_hashes_pallas
+from repro.kernels.fingerprint import fingerprint_chunks_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fingerprint_chunks(words: jnp.ndarray, *, use_pallas: bool | None = None) -> jnp.ndarray:
+    """(n_chunks, n_words) uint32 -> (n_chunks, 4) uint32."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return fingerprint_chunks_pallas(words)
+    return ref.fingerprint_chunks(words)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words", "use_pallas"))
+def _fingerprint_tensor_impl(flat_u32, *, chunk_words: int, use_pallas: bool):
+    n = flat_u32.shape[0]
+    pad = (-n) % chunk_words
+    w = jnp.pad(flat_u32, (0, pad)).reshape(-1, chunk_words)
+    if use_pallas:
+        return fingerprint_chunks_pallas(w)
+    return ref.fingerprint_chunks(w)
+
+
+def tensor_to_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Bitcast any tensor to a flat uint32 stream (pad odd byte-width via u8)."""
+    flat = x.reshape(-1)
+    nbytes = flat.dtype.itemsize
+    if nbytes % 4 == 0:
+        per = nbytes // 4
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1) if per == 1 else (
+            jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1)
+        )
+    # sub-word dtypes (u8/bf16/f16): widen via u8 packing
+    as_u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+    pad = (-as_u8.shape[0]) % 4
+    as_u8 = jnp.pad(as_u8, (0, pad))
+    g = as_u8.reshape(-1, 4).astype(jnp.uint32)
+    return g[:, 0] | (g[:, 1] << 8) | (g[:, 2] << 16) | (g[:, 3] << 24)
+
+
+def fingerprint_tensor_chunks(
+    x: jnp.ndarray, chunk_bytes: int = 512 * 1024, *, use_pallas: bool | None = None
+) -> jnp.ndarray:
+    """Fingerprint a tensor in chunk_bytes-sized pieces on device.
+
+    Returns (n_chunks, 4) uint32. Used by dedup checkpointing to name chunks
+    without host round-trips.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    chunk_words = max(128, chunk_bytes // 4)
+    flat = tensor_to_u32(x)
+    return _fingerprint_tensor_impl(flat, chunk_words=chunk_words, use_pallas=use_pallas)
+
+
+def device_fps_to_host(fps_u32: jnp.ndarray) -> list[Fingerprint]:
+    """Convert kernel output rows into namespaced Fingerprint objects."""
+    rows = np.asarray(jax.device_get(fps_u32))
+    return [device_fp([int(w) for w in row]) for row in rows]
+
+
+_GEAR = None
+
+
+def _gear_jnp() -> jnp.ndarray:
+    global _GEAR
+    if _GEAR is None:
+        _GEAR = jnp.asarray(np.array(GEAR_TABLE, dtype=np.uint32))
+    return _GEAR
+
+
+def flash_attention(
+    q: jnp.ndarray,             # (B, Sq, H, hd)
+    k: jnp.ndarray,             # (B, Skv, K, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    use_pallas: bool | None = None,
+) -> jnp.ndarray:
+    """Fused attention: Pallas kernel on TPU (K/V-resident blocking, see
+    repro.kernels.flash_attn), JAX chunked-attention fallback elsewhere or
+    when K/V exceed the VMEM-resident budget. Returns (B, Sq, H, hd)."""
+    import math
+
+    from repro.kernels.flash_attn import flash_attention_pallas
+    from repro.models.layers import chunked_attention
+
+    if use_pallas is None:
+        use_pallas = _on_tpu() and k.shape[1] <= 24 * 1024
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window)
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    qg = q.reshape(b, sq, kh, h // kh, hd)
+    out = chunked_attention(
+        qg, k, v, causal=causal, window=window, mask_offset=0,
+        q_chunk=2048, kv_chunk=1024, scale=1.0 / math.sqrt(hd),
+    )
+    return out.reshape(b, sq, h, hd)
+
+
+def cdc_boundaries(
+    data_u8: jnp.ndarray, mask: int, *, use_pallas: bool | None = None
+) -> jnp.ndarray:
+    """(n,) uint8 byte stream -> (n,) bool boundary mask."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    tvals = jnp.take(_gear_jnp(), data_u8.astype(jnp.int32))
+    if use_pallas:
+        h = cdc_hashes_pallas(tvals)
+    else:
+        h = ref.cdc_hashes(tvals)
+    return (h & jnp.uint32(mask)) == 0

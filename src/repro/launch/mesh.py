@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (TPU v5e pod).
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips; "pod" is
+pure data parallelism over the DCN/optical inter-pod links.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device, the dry-run sees 512 host
+devices via XLA_FLAGS set before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All pure-DP axes of the mesh ("pod" + "data" when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

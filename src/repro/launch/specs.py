@@ -1,0 +1,164 @@
+"""Dry-run sharding assembly: rules per (shape-kind, mesh), input/cache
+shardings, and the roofline bookkeeping helpers."""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import ShardingRules, make_rules, param_specs_for_tree
+from repro.launch.mesh import data_axes, mesh_axis_sizes
+
+# ------------------------------------------------------------------- rules --
+def rules_for(mesh, shape: ShapeSpec, overrides: dict | None = None) -> ShardingRules:
+    dp = data_axes(mesh)
+    kw: dict[str, Any] = dict(data_axes=dp, model_axis="model", fsdp_axis="data")
+    if shape.kind == "decode":
+        # Serving: FSDP weight-sharding would re-gather weights every step;
+        # keep weights TP-only (model axis), replicated across data.
+        kw["fsdp_axis"] = None
+        if shape.global_batch == 1:
+            # long-context decode: nothing to DP over; spread the KV/state
+            # sequence across the whole mesh.
+            kw["data_axes"] = None
+            kw["kv_seq_axis"] = tuple([*dp, "model"])
+        else:
+            kw["kv_seq_axis"] = "model"   # flash-decoding style seq split
+    rules = make_rules(**kw)
+    if shape.kind == "decode":
+        # the model axis is spent on the KV sequence; heads stay replicated
+        rules = rules.with_overrides(act_heads=None)
+    if overrides:
+        rules = rules.with_overrides(**overrides)
+    return ShardingRules(rules.rules, mesh_axis_sizes(mesh))
+
+
+# --------------------------------------------------------------- shardings --
+def _named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(mesh, rules: ShardingRules, tree):
+    specs = param_specs_for_tree(tree, rules)
+    return jax.tree.map(lambda s: _named(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(mesh, rules: ShardingRules, specs: dict):
+    """Input batch: leading dim = global batch -> DP axes."""
+    out = {}
+    for k, s in specs.items():
+        if s.shape == ():
+            out[k] = _named(mesh, P())
+            continue
+        dims: list[Any] = [rules.axis("batch")] + [None] * (len(s.shape) - 1)
+        out[k] = _named(mesh, rules.guard_spec(P(*dims), s.shape))
+    return out
+
+
+def cache_shardings(mesh, rules: ShardingRules, cache_tree):
+    """Decode caches. Leaf-name based placement:
+    k/v/ckv/kr: (..., B, S, [K], hd) -> (batch, kv_seq); mamba state
+    (..., B, H, N, P) -> heads on model; conv/state widths on model."""
+
+    def spec_for(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        batch_ax = rules.axis("batch")
+        seq_ax = rules.axis("kv_seq")
+        if name == "pos_idx":
+            return P(*([None] * nd))
+        if name in ("k", "v"):          # (G?, B, S, K, hd)
+            dims = [None] * nd
+            dims[-4], dims[-3] = batch_ax, seq_ax
+            return rules.guard_spec(P(*dims), leaf.shape)
+        if name in ("ckv", "kr"):        # (G?, B, S, r)
+            dims = [None] * nd
+            dims[-3], dims[-2] = batch_ax, seq_ax
+            return rules.guard_spec(P(*dims), leaf.shape)
+        if name == "state":
+            dims = [None] * nd
+            if nd >= 4:   # mamba: (G?, B, H, N, P) — batch, then heads on model
+                dims[-4], dims[-3] = batch_ax, "model"
+            else:         # rglru: (G?, B, W) — batch, width on model
+                dims[-2], dims[-1] = batch_ax, "model"
+            return rules.guard_spec(P(*dims), leaf.shape)
+        if name == "conv":               # (G?, B, K-1, C)
+            dims = [None] * nd
+            dims[-3], dims[-1] = batch_ax, "model"
+            return rules.guard_spec(P(*dims), leaf.shape)
+        return P(*([None] * nd))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+    return jax.tree.map(lambda s: _named(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- roofline --
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved by each collective kind (post-SPMD HLO)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        out[op] = out.get(op, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, n_params: int, n_active: int) -> float:
+    """MODEL_FLOPS: 6ND train / 2ND per generated token (decode)."""
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def count_params(tree) -> int:
+    return sum(int(jnp.size(x)) if hasattr(x, "size") else 0 for x in jax.tree.leaves(tree))
+
+
+def active_params(cfg: ModelConfig, n_params: int) -> int:
+    """MoE: only top_k of n_experts routed experts are active per token."""
+    if not cfg.n_experts:
+        return n_params
+    per_expert = 3 * cfg.d_model * cfg.expert_d_ff
+    routed_total = cfg.n_layers * cfg.n_experts * per_expert
+    routed_active = cfg.n_layers * cfg.top_k * per_expert
+    return n_params - routed_total + routed_active

@@ -1,0 +1,82 @@
+"""Training entrypoint.
+
+Single-host (CPU/demo) mode runs real steps on a reduced config with dedup
+checkpointing against the in-process shared-nothing cluster; production mode
+(--dryrun) lowers the full config under the 256/512-chip mesh (see
+dryrun.py, which this wraps for convenience).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b --steps 50 \
+      --ckpt-every 10 [--resume]
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-110b --dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", default=None, help="checkpoint name to resume from")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--nodes", type=int, default=4, help="dedup storage nodes")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # Re-exec through dryrun so XLA_FLAGS lands before jax init.
+        import os
+        import subprocess
+        import sys
+
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape, "--force"]
+        raise SystemExit(subprocess.call(cmd, env=os.environ))
+
+    from repro.checkpoint import DedupCheckpointer
+    from repro.configs import get_config
+    from repro.core import ChunkingSpec, DedupCluster
+    from repro.data import SyntheticLMData
+    from repro.models import build_model
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, train_loop
+    from repro.train.loop import init_train_state
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    cluster = DedupCluster.create(args.nodes, replicas=2,
+                                  chunking=ChunkingSpec("fixed", 256 * 1024))
+    ck = DedupCheckpointer(cluster)
+    opt = AdamWConfig(total_steps=args.steps, compress_grads=args.compress_grads)
+    tcfg = TrainConfig(steps=args.steps, accum=args.accum,
+                       checkpoint_every=args.ckpt_every, opt=opt)
+
+    state = None
+    start = 0
+    if args.resume:
+        template = init_train_state(model, jax.random.PRNGKey(0), opt)
+        state = ck.restore(args.resume, like=template)
+        start = int(args.resume.split("-")[-1])
+        print(f"resumed from {args.resume} at step {start}")
+
+    state, hist = train_loop(model, data, tcfg, checkpointer=ck, state=state, start_step=start)
+    for h in hist:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} ({h['sec']:.2f}s)")
+    if args.ckpt_every:
+        print("checkpoints:", ck.list_checkpoints())
+        print("dedup space savings: %.1f%%" % (100 * cluster.space_savings()))
+        print("ckpt stats:", ck.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Whisper-style encoder–decoder backbone (conv/audio frontend stubbed).
+
+Encoder: bidirectional self-attention blocks over precomputed frame
+embeddings (the stub input). Decoder: causal self-attention + cross-attention
+blocks. Both stacks scan over layers like transformer.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _spec(cfg: ModelConfig, causal: bool) -> L.AttnSpec:
+    return L.AttnSpec(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        causal=causal,
+        rope_theta=cfg.rope_theta,
+    )
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "attn": L.init_attention(k1, _spec(cfg, False), cfg.param_dtype),
+        "norm2": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "ffn": L.init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.act),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "self_attn": L.init_attention(k1, _spec(cfg, True), cfg.param_dtype),
+        "norm_x": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "cross_attn": L.init_attention(k2, _spec(cfg, False), cfg.param_dtype),
+        "norm2": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "ffn": L.init_ffn(k3, cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.act),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_enc_layers + cfg.n_layers + 2)
+    enc = [_init_enc_layer(keys[i], cfg) for i in range(cfg.n_enc_layers)]
+    dec = [_init_dec_layer(keys[cfg.n_enc_layers + i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": L.init_embedding(keys[-2], cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "final_norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    b, s_enc, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+
+    def body(x, lp):
+        h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+        x = x + L.mha(lp["attn"], _spec(cfg, False), h, positions)
+        x = x + L.ffn(lp["ffn"], L.rms_norm(lp["norm2"], x, cfg.norm_eps), cfg.act)
+        return x, None
+
+    x = frames
+    if cfg.unroll_layers:
+        for i in range(cfg.n_enc_layers):
+            lp = jax.tree.map(lambda p: p[i], params["enc_blocks"])
+            x, _ = jax.checkpoint(body)(x, lp)
+    else:
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_blocks"])
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(lp, cfg, x, positions, enc_out, enc_positions, want_cache):
+    h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+    cache = None
+    if want_cache:
+        y, (k, v) = L.mha(lp["self_attn"], _spec(cfg, True), h, positions, return_kv=True)
+        cache = {"k": k, "v": v}
+    else:
+        y = L.mha(lp["self_attn"], _spec(cfg, True), h, positions)
+    x = x + y
+    hx = L.rms_norm(lp["norm_x"], x, cfg.norm_eps)
+    x = x + L.mha(
+        lp["cross_attn"], _spec(cfg, False), hx, positions,
+        kv_x=enc_out, kv_positions=enc_positions, use_rope=False,
+    )
+    x = x + L.ffn(lp["ffn"], L.rms_norm(lp["norm2"], x, cfg.norm_eps), cfg.act)
+    return x, cache
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out):
+    b, s_dec = tokens.shape
+    s_enc = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_dec), (b, s_dec))
+    enc_pos = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, lp):
+        x, _ = _dec_block(lp, cfg, x, positions, enc_out, enc_pos, False)
+        return x, None
+
+    if cfg.unroll_layers:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["dec_blocks"])
+            x, _ = jax.checkpoint(body)(x, lp)
+    else:
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_blocks"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x)
+
+
+def encdec_prefill(params, cfg: ModelConfig, tokens, frames):
+    """Returns (logits, caches) with caches = {self: stacked kv, cross: stacked kv}."""
+    enc_out = encode(params, cfg, frames)
+    b, s_dec = tokens.shape
+    s_enc = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_dec), (b, s_dec))
+    enc_pos = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, lp):
+        x, cache = _dec_block(lp, cfg, x, positions, enc_out, enc_pos, True)
+        # also emit cross K/V for this layer
+        spec = _spec(cfg, False)
+        ck = L.dense(lp["cross_attn"]["wk"], enc_out).reshape(b, s_enc, spec.n_kv_heads, spec.head_dim)
+        cv = L.dense(lp["cross_attn"]["wv"], enc_out).reshape(b, s_enc, spec.n_kv_heads, spec.head_dim)
+        return x, {"self": cache, "cross": {"k": ck, "v": cv}}
+
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["dec_blocks"])
+            x, c = body(x, lp)
+            outs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x), caches
+
+
+def encdec_decode(params, cfg: ModelConfig, caches, token, pos):
+    """One-token decode. caches: {"self": {k,v} stacked, "cross": {k,v} stacked}."""
+    b = token.shape[0]
+    x = L.embed(params["embed"], token)
+    spec_self = _spec(cfg, True)
+    spec_cross = _spec(cfg, False)
+
+    def body(x, inp):
+        lp, c = inp
+        h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+        y, ck, cv = L.mha_decode(lp["self_attn"], spec_self, h, c["self"]["k"], c["self"]["v"], pos)
+        x = x + y
+        hx = L.rms_norm(lp["norm_x"], x, cfg.norm_eps)
+        # cross attention against precomputed encoder K/V (no mask, no rope)
+        kx, vx = c["cross"]["k"], c["cross"]["v"]
+        q = L.dense(lp["cross_attn"]["wq"], hx).reshape(b, 1, spec_cross.n_heads, spec_cross.head_dim)
+        rep = spec_cross.n_heads // spec_cross.n_kv_heads
+        qg = q.reshape(b, 1, spec_cross.n_kv_heads, rep, spec_cross.head_dim)
+        sc = jnp.einsum("bqkrh,bskh->bkrqs", qg, kx).astype(jnp.float32) / (spec_cross.head_dim ** 0.5)
+        w = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkrqs,bskh->bqkrh", w, vx).reshape(b, 1, spec_cross.n_heads * spec_cross.head_dim)
+        x = x + L.dense(lp["cross_attn"]["wo"], o)
+        x = x + L.ffn(lp["ffn"], L.rms_norm(lp["norm2"], x, cfg.norm_eps), cfg.act)
+        return x, {"self": {"k": ck, "v": cv}, "cross": c["cross"]}
+
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["dec_blocks"])
+            cc = jax.tree.map(lambda v: v[i], caches)
+            x, nc = body(x, (lp, cc))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x), new_caches
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, s_dec: int, s_enc: int):
+    dt = cfg.param_dtype
+    hd = cfg.resolved_head_dim
+    nl = cfg.n_layers
+    kv = lambda s: {
+        "k": jax.ShapeDtypeStruct((nl, batch, s, cfg.n_kv_heads, hd), dt),
+        "v": jax.ShapeDtypeStruct((nl, batch, s, cfg.n_kv_heads, hd), dt),
+    }
+    return {"self": kv(s_dec), "cross": kv(s_enc)}

@@ -1,0 +1,382 @@
+"""Shared model building blocks (pure functions over param dicts).
+
+Conventions:
+  * params are nested dicts of jnp arrays; leading "G" axis on scan-stacked
+    block params is added by transformer.py, not here.
+  * activations bf16 (config dtype); norms/softmax/rope math in fp32.
+  * every matmul annotates logical sharding via repro.distributed.shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, in_logical: str = "w_in", out_logical: str = "w_out"):
+    _ = (in_logical, out_logical)
+    w = p["w"]
+    if "w_scale" in p:  # w8a16 serving weights: int8 + per-tensor scale
+        w = w.astype(x.dtype) * p["w_scale"].astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def raw_weight(p, dtype):
+    """Materialize a dense weight in compute dtype (dequantizing w8)."""
+    w = p["w"]
+    if "w_scale" in p:
+        return w.astype(dtype) * p["w_scale"].astype(dtype)
+    return w.astype(dtype)
+
+
+def quantize_dense_weights(params):
+    """Post-init transform: every 2-D dense 'w' becomes int8 + per-tensor
+    scale (w8a16 serving mode). Norm scales, biases, embeddings and SSM
+    state params stay in their original dtype."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and hasattr(node["w"], "ndim") and node["w"].ndim in (2, 3) \
+                    and node["w"].dtype != jnp.int8:
+                w = node["w"].astype(jnp.float32)
+                if w.ndim == 3:   # scan-stacked (G, din, dout): per-layer scale
+                    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2), keepdims=True), 1e-8) / 127.0
+                else:
+                    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 127.0
+                q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+                out = dict(node)
+                out["w"] = q
+                out["w_scale"] = scale.astype(jnp.float32)
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def init_rms_norm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------- rotary --
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : hd // 2], xf[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- ffn ---
+def init_ffn(key, d_model: int, d_ff: int, dtype, act: str = "silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    _ = act  # activation is a config property, not a param (pytree purity)
+    return {
+        "gate": init_dense(k1, d_model, d_ff, dtype),
+        "up": init_dense(k2, d_model, d_ff, dtype),
+        "down": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+def _act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def ffn(p, x, act: str = "silu"):
+    g = dense(p["gate"], x)
+    u = dense(p["up"], x)
+    g = shard(g, "batch", "seq", "act_d_ff")
+    h = _act_fn(act)(g) * u
+    y = dense(p["down"], h, in_logical="w_in2", out_logical="w_out2")
+    return shard(y, "batch", "residual_seq", None)
+
+
+# ------------------------------------------------------------- attention ---
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: int = 0            # 0 = global causal; >0 = sliding window
+    causal: bool = True
+    rope_theta: float = 1e4
+    impl: str = "dense"        # "dense" | "chunked" (flash-style, O(S*C) mem)
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+    unroll_inner: bool = False  # python inner loop (dry-run exact costing)
+
+
+def init_attention(key, s: AttnSpec, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, s.d_model, s.n_heads * s.head_dim, dtype, bias=s.qkv_bias),
+        "wk": init_dense(kk, s.d_model, s.n_kv_heads * s.head_dim, dtype, bias=s.qkv_bias),
+        "wv": init_dense(kv, s.d_model, s.n_kv_heads * s.head_dim, dtype, bias=s.qkv_bias),
+        "wo": init_dense(ko, s.n_heads * s.head_dim, s.d_model, dtype),
+    }
+
+
+def chunked_attention(
+    qg: jnp.ndarray,            # (B, Sq, K, R, hd) grouped queries
+    k: jnp.ndarray,             # (B, Skv, K, hd)
+    v: jnp.ndarray,             # (B, Skv, K, hd)
+    *,
+    causal: bool,
+    window: int,
+    mask_offset: int,
+    q_chunk: int,
+    kv_chunk: int,
+    scale: float,
+    unroll_inner: bool = False,
+) -> jnp.ndarray:
+    """Flash-style double-chunked attention: O(Sq * kv_chunk) live memory.
+
+    TPU adaptation of blockwise attention: query chunks are a Python loop
+    (static banded/causal ranges skip fully-masked KV chunks — the win for
+    sliding-window layers); KV chunks run under lax.scan with running
+    max/denominator in fp32. Bit-compatible with the dense path (same
+    softmax), validated by tests/test_chunked_attn.py.
+    """
+    b, sq, kh, rep, hd = qg.shape
+    skv = k.shape[1]
+    vd = v.shape[-1]            # v head dim may differ from qk (MLA)
+    cq = min(q_chunk, sq)
+    ck = min(kv_chunk, skv)
+    assert sq % cq == 0 and skv % ck == 0, (sq, cq, skv, ck)
+    n_kv_chunks = skv // ck
+    k_chunks = k.reshape(b, n_kv_chunks, ck, kh, hd)
+    v_chunks = v.reshape(b, n_kv_chunks, ck, kh, vd)
+
+    outs = []
+    for qi in range(sq // cq):
+        q_lo = qi * cq
+        q_abs = q_lo + mask_offset                        # kv-pos of chunk start
+        # static KV range for this query chunk
+        j_hi = n_kv_chunks if not causal else min(
+            n_kv_chunks, (q_abs + cq - 1) // ck + 1)
+        j_lo = 0 if window <= 0 else max(0, (q_abs - window + 1) // ck)
+        j_lo = min(j_lo, max(j_hi - 1, 0))
+        qc = qg[:, q_lo : q_lo + cq].astype(jnp.float32)  # (B,Cq,K,R,hd)
+
+        qpos = (jnp.arange(cq) + q_abs)[None, :]          # (1, Cq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, j = inp
+            kpos = (j * ck + jnp.arange(ck))[:, None].T   # (1, Ck)
+            s = jnp.einsum("bqkrh,bskh->bkrqs", qc, kc.astype(jnp.float32)) * scale
+            ok = jnp.ones((cq, ck), bool)
+            if causal:
+                ok = ok & (kpos <= qpos.T)
+            if window > 0:
+                ok = ok & (kpos > qpos.T - window)
+            s = jnp.where(ok[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard: fully-masked rows keep m = -inf; exp(-inf - -inf) -> nan
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskh->bkrqh", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, rep, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, rep, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, rep, cq, vd), jnp.float32)
+        idxs = jnp.arange(j_lo, j_hi)
+        kc_sel = k_chunks[:, j_lo:j_hi]
+        vc_sel = v_chunks[:, j_lo:j_hi]
+        if unroll_inner:
+            carry = (m0, l0, a0)
+            for t, j in enumerate(range(j_lo, j_hi)):
+                carry, _ = kv_step(
+                    carry, (kc_sel[:, t], vc_sel[:, t], jnp.int32(j)))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.moveaxis(kc_sel, 1, 0), jnp.moveaxis(vc_sel, 1, 0), idxs),
+            )
+        o = acc / jnp.maximum(l[..., None], 1e-30)        # (B,K,R,Cq,vd)
+        # downcast at the chunk boundary: everything downstream (wo matmul,
+        # residual, collectives) must run in the compute dtype, not fp32
+        outs.append(jnp.moveaxis(o, 3, 1).astype(v.dtype))  # (B,Cq,K,R,vd)
+    return jnp.concatenate(outs, axis=1)
+
+
+def _attn_mask(sq: int, skv: int, offset: int, window: int, causal: bool) -> jnp.ndarray:
+    """(sq, skv) additive mask in fp32. offset = kv index of query 0."""
+    qi = jnp.arange(sq)[:, None] + offset
+    ki = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok = ok & (ki <= qi)
+    if window > 0:
+        ok = ok & (ki > qi - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def mha(
+    p,
+    s: AttnSpec,
+    x: jnp.ndarray,                  # (B, S, D)
+    positions: jnp.ndarray,          # (B, S)
+    kv_x: jnp.ndarray | None = None,  # cross-attention source
+    kv_positions: jnp.ndarray | None = None,
+    mask_offset: int = 0,
+    use_rope: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, sq, _ = x.shape
+    src = x if kv_x is None else kv_x
+    skv = src.shape[1]
+    q = dense(p["wq"], x).reshape(b, sq, s.n_heads, s.head_dim)
+    k = dense(p["wk"], src).reshape(b, skv, s.n_kv_heads, s.head_dim)
+    v = dense(p["wv"], src).reshape(b, skv, s.n_kv_heads, s.head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, s.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kpos, s.rope_theta)
+    q = shard(q, "batch", "seq", "act_heads", None)
+    k = shard(k, "batch", "kv_seq", "act_heads", None)
+    v = shard(v, "batch", "kv_seq", "act_heads", None)
+
+    rep = s.n_heads // s.n_kv_heads
+    qg = q.reshape(b, sq, s.n_kv_heads, rep, s.head_dim)
+    if s.impl == "chunked" and kv_x is None:
+        o = chunked_attention(
+            qg, k, v,
+            causal=s.causal, window=s.window, mask_offset=mask_offset,
+            q_chunk=s.q_chunk, kv_chunk=s.kv_chunk,
+            scale=1.0 / math.sqrt(s.head_dim), unroll_inner=s.unroll_inner,
+        ).astype(x.dtype).reshape(b, sq, s.n_heads * s.head_dim)
+    else:
+        scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32)
+        scores = scores / math.sqrt(s.head_dim)
+        if kv_x is None:  # self-attention mask
+            scores = scores + _attn_mask(sq, skv, mask_offset, s.window, s.causal)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkrqs,bskh->bqkrh", w, v).reshape(b, sq, s.n_heads * s.head_dim)
+    o = shard(o, "batch", "seq", "act_heads")
+    y = dense(p["wo"], o, in_logical="w_in2", out_logical="w_out2")
+    y = shard(y, "batch", "residual_seq", None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# symmetric fixed-point scale for int8 KV quantization (kv8 serving mode);
+# post-rope keys and values are O(1), so +-8.0 full-scale keeps headroom.
+KV_SCALE = 8.0 / 127.0
+
+
+def _kv_quant(x: jnp.ndarray, cache_dtype) -> jnp.ndarray:
+    if cache_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE), -127, 127).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _kv_dequant(x: jnp.ndarray) -> jnp.ndarray:
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) * KV_SCALE
+    return x
+
+
+def mha_decode(
+    p,
+    s: AttnSpec,
+    x: jnp.ndarray,            # (B, 1, D) new token(s)
+    cache_k: jnp.ndarray,      # (B, S_max, K, hd)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,          # scalar int32: index of the new token
+    use_rope: bool = True,
+):
+    """Single-token decode against a KV cache. Returns (y, new_k, new_v)."""
+    b, one, _ = x.shape
+    smax = cache_k.shape[1]
+    q = dense(p["wq"], x).reshape(b, one, s.n_heads, s.head_dim)
+    k = dense(p["wk"], x).reshape(b, one, s.n_kv_heads, s.head_dim)
+    v = dense(p["wv"], x).reshape(b, one, s.n_kv_heads, s.head_dim)
+    if use_rope:
+        pvec = jnp.full((b, one), pos, jnp.int32)
+        q = apply_rope(q, pvec, s.rope_theta)
+        k = apply_rope(k, pvec, s.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, _kv_quant(k, cache_k.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, _kv_quant(v, cache_v.dtype), pos, axis=1)
+    ck = shard(ck, "batch", "kv_seq", "act_heads", None)
+    cv = shard(cv, "batch", "kv_seq", "act_heads", None)
+
+    rep = s.n_heads // s.n_kv_heads
+    qg = q.reshape(b, one, s.n_kv_heads, rep, s.head_dim)
+    scores = jnp.einsum(
+        "bqkrh,bskh->bkrqs", qg.astype(jnp.float32), _kv_dequant(ck).astype(jnp.float32)
+    )
+    scores = scores / math.sqrt(s.head_dim)
+    ki = jnp.arange(smax)[None, None, None, None, :]
+    ok = ki <= pos
+    if s.window > 0:
+        ok = ok & (ki > pos - s.window)
+    scores = jnp.where(ok, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum(
+        "bkrqs,bskh->bqkrh", w.astype(jnp.float32), _kv_dequant(cv).astype(jnp.float32)
+    ).astype(x.dtype).reshape(b, one, s.n_heads * s.head_dim)
+    y = dense(p["wo"], o, in_logical="w_in2", out_logical="w_out2")
+    return y, ck, cv
+
+
+# ------------------------------------------------------------- embedding ---
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    w = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return {"table": w.astype(dtype)}
+
+
+def embed(p, tokens: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.take(p["table"], tokens, axis=0)
+    return shard(y, "batch", "seq", None)
+
+
+def unembed(p, x: jnp.ndarray) -> jnp.ndarray:
+    logits = x @ p["table"].T
+    return shard(logits, "batch", "seq", "act_vocab")

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Prefill: query low-rank path (q_lora) and compressed KV latent c_kv
+(kv_lora_rank) + a shared rope key (qk_rope_head_dim); keys/values expanded
+per head for standard attention.
+
+Decode: *absorbed* form — the per-head expansion matrices W_uk / W_uv are
+absorbed into the query / output projections so attention runs directly over
+the (S, r + rope) latent cache. This is MLA's deployment win (tiny cache,
+no per-step expansion) and the form we lower for decode shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models.layers import apply_rope, dense, init_dense, init_rms_norm, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    impl: str = "dense"
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+    unroll_inner: bool = False
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def init_mla(key, s: MLASpec, dtype):
+    ks = jax.random.split(key, 7)
+    H, r = s.n_heads, s.kv_lora_rank
+    return {
+        "w_dq": init_dense(ks[0], s.d_model, s.q_lora_rank, dtype),
+        "q_norm": init_rms_norm(s.q_lora_rank, dtype),
+        "w_uq": init_dense(ks[1], s.q_lora_rank, H * s.qk_head_dim, dtype),
+        "w_dkv": init_dense(ks[2], s.d_model, r, dtype),
+        "kv_norm": init_rms_norm(r, dtype),
+        "w_kr": init_dense(ks[3], s.d_model, s.qk_rope_head_dim, dtype),
+        "w_uk": init_dense(ks[4], r, H * s.qk_nope_head_dim, dtype),
+        "w_uv": init_dense(ks[5], r, H * s.v_head_dim, dtype),
+        "wo": init_dense(ks[6], H * s.v_head_dim, s.d_model, dtype),
+    }
+
+
+def _latents(p, s: MLASpec, x, positions):
+    """Compressed KV latent + rope key for a full sequence."""
+    b, sl, _ = x.shape
+    c_kv = rms_norm(p["kv_norm"], dense(p["w_dkv"], x), s.norm_eps)   # (B,S,r)
+    k_rope = dense(p["w_kr"], x).reshape(b, sl, 1, s.qk_rope_head_dim)
+    k_rope = apply_rope(k_rope, positions, s.rope_theta)
+    return c_kv, k_rope
+
+
+def _queries(p, s: MLASpec, x, positions):
+    b, sl, _ = x.shape
+    ql = rms_norm(p["q_norm"], dense(p["w_dq"], x), s.norm_eps)
+    q = dense(p["w_uq"], ql).reshape(b, sl, s.n_heads, s.qk_head_dim)
+    q_nope = q[..., : s.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., s.qk_nope_head_dim :], positions, s.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_prefill(p, s: MLASpec, x, positions, mask, return_cache: bool = False):
+    """x: (B,S,D); mask: (S,S) additive fp32. Standard (expanded) attention."""
+    b, sl, _ = x.shape
+    H = s.n_heads
+    c_kv, k_rope = _latents(p, s, x, positions)
+    q_nope, q_rope = _queries(p, s, x, positions)
+    k_nope = dense(p["w_uk"], c_kv).reshape(b, sl, H, s.qk_nope_head_dim)
+    v = dense(p["w_uv"], c_kv).reshape(b, sl, H, s.v_head_dim)
+    q_nope = shard(q_nope, "batch", "seq", "act_heads", None)
+    k_nope = shard(k_nope, "batch", "kv_seq", "act_heads", None)
+    v = shard(v, "batch", "kv_seq", "act_heads", None)
+
+    scale = 1.0 / math.sqrt(s.qk_head_dim)
+    if s.impl == "chunked":
+        from repro.models.layers import chunked_attention
+
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)       # (B,S,H,qk)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, sl, H, s.qk_rope_head_dim))],
+            axis=-1,
+        )
+        o = chunked_attention(
+            q_full[:, :, :, None, :], k_full, v,
+            causal=True, window=0, mask_offset=0,
+            q_chunk=s.q_chunk, kv_chunk=s.kv_chunk, scale=scale,
+            unroll_inner=s.unroll_inner,
+        ).astype(x.dtype).reshape(b, sl, H * s.v_head_dim)
+    else:
+        scores = (
+            jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+            + jnp.einsum("bqhd,bsxd->bhqs", q_rope, k_rope)
+        ).astype(jnp.float32) * scale
+        scores = scores + mask
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqs,bshd->bqhd", w, v).reshape(b, sl, H * s.v_head_dim)
+    y = dense(p["wo"], o, in_logical="w_in2", out_logical="w_out2")
+    y = shard(y, "batch", "residual_seq", None)
+    if return_cache:
+        return y, (c_kv, k_rope.reshape(b, sl, s.qk_rope_head_dim))
+    return y
+
+
+def mla_decode(p, s: MLASpec, x, cache_ckv, cache_kr, pos):
+    """Absorbed decode. cache_ckv: (B,S,r); cache_kr: (B,S,rope). Returns
+    (y, new_ckv, new_kr)."""
+    b, one, _ = x.shape
+    H, r = s.n_heads, s.kv_lora_rank
+    pvec = jnp.full((b, one), pos, jnp.int32)
+    c_kv, k_rope = _latents(p, s, x, pvec)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), pos, axis=1
+    )
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, k_rope.reshape(b, one, s.qk_rope_head_dim).astype(cache_kr.dtype), pos, axis=1
+    )
+    cache_ckv = shard(cache_ckv, "batch", "kv_seq", None)
+
+    q_nope, q_rope = _queries(p, s, x, pvec)
+    # Absorb W_uk into q: q_lat (B,1,H,r) = q_nope @ W_uk^T (per head).
+    from repro.models.layers import raw_weight
+
+    w_uk = raw_weight(p["w_uk"], x.dtype).reshape(r, H, s.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = 1.0 / math.sqrt(s.qk_head_dim)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, cache_ckv)
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope, cache_kr)
+    ).astype(jnp.float32) * scale
+    smax = cache_ckv.shape[1]
+    ok = jnp.arange(smax)[None, None, None, :] <= pos
+    scores = jnp.where(ok, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, cache_ckv)       # (B,1,H,r)
+    # Absorb W_uv into the output projection.
+    w_uv = raw_weight(p["w_uv"], x.dtype).reshape(r, H, s.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv).reshape(b, one, H * s.v_head_dim)
+    y = dense(p["wo"], o, in_logical="w_in2", out_logical="w_out2")
+    return y, cache_ckv, cache_kr

@@ -1,0 +1,193 @@
+"""Public model API: build_model(cfg) -> Model.
+
+Model exposes pure functions used by the train loop, the serving driver and
+the dry-run launcher:
+
+    init(rng)                          -> params
+    loss_fn(params, batch)             -> (loss, metrics)
+    prefill(params, batch)             -> (logits, caches)
+    decode_step(params, caches, token, pos) -> (logits, caches)
+    input_specs(shape)                 -> dict of ShapeDtypeStruct
+    cache_specs(shape)                 -> ShapeDtypeStruct pytree
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def lm_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, vocab: int = 0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean masked CE in fp32. labels < 0 are ignored. When the logits dim
+    is padded past `vocab` (sharding-friendly padded_vocab), padded ids are
+    masked to -inf so they carry no probability mass."""
+    lf = logits.astype(jnp.float32)
+    if vocab and lf.shape[-1] > vocab:
+        pad_mask = jnp.arange(lf.shape[-1]) >= vocab
+        lf = jnp.where(pad_mask[None, None, :], -1e30, lf)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    tot = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / tot, tot
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    input_specs: Callable
+    cache_specs: Callable
+
+    def param_specs(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+
+# --------------------------------------------------------------------------
+def _frontend_tokens(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """#positions supplied by the modality frontend stub."""
+    if cfg.frontend == "vision_stub":
+        return min(cfg.n_frontend_tokens, shape.seq_len // 2)
+    return 0
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    if cfg.enc_dec:
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+# ------------------------------------------------------------ decoder LMs --
+def _build_decoder(cfg: ModelConfig) -> Model:
+    aux_coeff = 0.01 if cfg.n_experts else 0.0
+
+    def init(rng):
+        params = T.init_decoder(rng, cfg)
+        if cfg.weight_quant:
+            params = L.quantize_dense_weights(params)
+        return params
+
+    def _embed_inputs(params, batch):
+        """Token (+ frontend) embeddings and positions."""
+        tokens = batch["tokens"]
+        x = L.embed(params["embed"], tokens)
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return x, positions
+
+    def loss_fn(params, batch):
+        x, positions = _embed_inputs(params, batch)
+        hidden, aux = T.decoder_hidden(params, cfg, x, positions)
+        n_front = x.shape[1] - batch["tokens"].shape[1]
+        if n_front:
+            hidden = hidden[:, n_front:]
+        logits = T.logits_from_hidden(params, cfg, hidden)
+        loss, n_tok = lm_loss(logits, batch["labels"], cfg.vocab)
+        total = loss + aux_coeff * aux
+        return total, {"loss": loss, "aux_loss": aux, "tokens": n_tok}
+
+    def prefill(params, batch, cache_len: int = 0):
+        x, positions = _embed_inputs(params, batch)
+        hidden, caches = T.decoder_prefill(params, cfg, x, positions, smax=cache_len)
+        logits = T.logits_from_hidden(params, cfg, hidden[:, -1:])
+        return logits, caches
+
+    def decode_step(params, caches, token, pos):
+        x = L.embed(params["embed"], token)
+        hidden, caches = T.decoder_decode(params, cfg, caches, x, pos)
+        logits = T.logits_from_hidden(params, cfg, hidden)
+        return logits, caches
+
+    def input_specs(shape: ShapeSpec) -> dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        n_front = _frontend_tokens(cfg, shape)
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s - n_front), i32),
+                "labels": jax.ShapeDtypeStruct((b, s - n_front), i32),
+            }
+        elif shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s - n_front), i32)}
+        else:  # decode
+            return {
+                "token": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+        if n_front:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_front, cfg.d_model), cfg.param_dtype
+            )
+        return specs
+
+    def cache_specs(shape: ShapeSpec):
+        return T.decoder_cache_specs(cfg, shape.global_batch, shape.seq_len)
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, input_specs, cache_specs)
+
+
+# ----------------------------------------------------------- enc-dec (ASR) --
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return ED.init_encdec(rng, cfg)
+
+    def _split(shape: ShapeSpec) -> tuple[int, int]:
+        """seq_len budget split: half encoder frames, half decoder tokens."""
+        return shape.seq_len // 2, shape.seq_len // 2
+
+    def loss_fn(params, batch):
+        enc_out = ED.encode(params, cfg, batch["frame_embeds"])
+        logits = ED.decode_train(params, cfg, batch["tokens"], enc_out)
+        loss, n_tok = lm_loss(logits, batch["labels"], cfg.vocab)
+        return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32), "tokens": n_tok}
+
+    def prefill(params, batch):
+        logits, caches = ED.encdec_prefill(params, cfg, batch["tokens"], batch["frame_embeds"])
+        return logits[:, -1:], caches
+
+    def decode_step(params, caches, token, pos):
+        return ED.encdec_decode(params, cfg, caches, token, pos)
+
+    def input_specs(shape: ShapeSpec) -> dict[str, Any]:
+        b = shape.global_batch
+        s_enc, s_dec = _split(shape)
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {
+                "frame_embeds": jax.ShapeDtypeStruct((b, s_enc, cfg.d_model), cfg.param_dtype),
+                "tokens": jax.ShapeDtypeStruct((b, s_dec), i32),
+                "labels": jax.ShapeDtypeStruct((b, s_dec), i32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frame_embeds": jax.ShapeDtypeStruct((b, s_enc, cfg.d_model), cfg.param_dtype),
+                "tokens": jax.ShapeDtypeStruct((b, s_dec), i32),
+            }
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def cache_specs(shape: ShapeSpec):
+        s_enc, s_dec = _split(shape)
+        return ED.encdec_cache_specs(cfg, shape.global_batch, s_dec, s_enc)
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, input_specs, cache_specs)

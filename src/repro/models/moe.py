@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN with shared + routed experts (Qwen-MoE / Llama-4).
+
+Baseline dispatch is the GShard dense-einsum formulation (capacity-based,
+token-dropping): fully partitionable under GSPMD with experts on the
+`model` mesh axis (EP), dispatch/combine lowering to all-to-alls. A
+sort-based dispatch variant exists for the perf pass (see EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models.layers import _act_fn, dense, init_dense, init_ffn, ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0          # d_ff of the shared expert block (total)
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    moe_group: int = 1024         # tokens per dispatch group; capacity and
+                                  # dispatch-einsum FLOPs scale with it
+    dispatch: str = "einsum"      # "einsum" (GShard baseline) | "sort"
+
+
+def init_moe(key, s: MoESpec, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    E, D, F = s.n_experts, s.d_model, s.expert_d_ff
+    scale = 1.0 / math.sqrt(D)
+    kg, ku, kd = jax.random.split(ke, 3)
+    p = {
+        "router": init_dense(kr, D, E, dtype),
+        "experts": {
+            "gate": (jax.random.normal(kg, (E, D, F), jnp.float32) * scale).astype(dtype),
+            "up": (jax.random.normal(ku, (E, D, F), jnp.float32) * scale).astype(dtype),
+            "down": (jax.random.normal(kd, (E, F, D), jnp.float32) / math.sqrt(F)).astype(dtype),
+        },
+    }
+    if s.n_shared_experts:
+        p["shared"] = init_ffn(ks, D, s.shared_d_ff or s.expert_d_ff * s.n_shared_experts, dtype, s.act)
+    return p
+
+
+def _routing(p, s: MoESpec, x2d: jnp.ndarray):
+    """x2d: (T, D) -> top-k expert ids/weights + aux load-balance loss."""
+    logits = dense(p["router"], x2d).astype(jnp.float32)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, s.top_k)                    # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style aux loss: E * sum_e fraction_tokens_e * mean_prob_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, s.n_experts, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = s.n_experts * jnp.sum(me * ce)
+    return ids, weights.astype(x2d.dtype), aux
+
+
+def moe_ffn(p, s: MoESpec, x: jnp.ndarray):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    GShard capacity-based einsum dispatch over token *groups* of
+    `moe_group`: capacity C = ceil(k * g * cf / E) scales with the group
+    size, which keeps the dispatch-einsum FLOPs (T*E*C*D ~ T*g*k*cf*D) a
+    small fraction of expert FLOPs. Groups stay data-sharded; experts live
+    on the model axis, so dispatch/combine lower to all-to-alls under GSPMD.
+    """
+    b, sl, d = x.shape
+    t = b * sl
+    g = min(s.moe_group, t)
+    while t % g:
+        g //= 2
+    ng = t // g
+    x2d = x.reshape(t, d)
+    ids, weights, aux = _routing(p, s, x2d)
+    cap = max(1, int(math.ceil(s.top_k * g * s.capacity_factor / s.n_experts)))
+
+    xg = x2d.reshape(ng, g, d)
+    ids_g = ids.reshape(ng, g, s.top_k)
+    w_g = weights.reshape(ng, g, s.top_k)
+
+    # position of each (token, choice) within its expert, per group
+    onehot = jax.nn.one_hot(ids_g, s.n_experts, dtype=jnp.int32)       # (G,g,k,E)
+    pos_in_e = jnp.cumsum(onehot.reshape(ng, g * s.top_k, s.n_experts), axis=1)
+    pos_in_e = (pos_in_e - 1).reshape(ng, g, s.top_k, s.n_experts)
+    keep = (pos_in_e < cap) & (onehot > 0)                              # (G,g,k,E)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, -1), cap, dtype=xg.dtype)
+    kd = keep.astype(xg.dtype)
+    disp = jnp.einsum("gske,gskec->gsec", kd, pos_oh)                   # (G,g,E,C)
+    comb = jnp.einsum("gsk,gske,gskec->gsec", w_g, kd, pos_oh)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)            # (G, E, C, D)
+    xe = shard(xe, "batch", "act_experts", None, None)     # all-to-all: g->E
+    we = p["experts"]
+    gh = jnp.einsum("gecd,edf->gecf", xe, we["gate"])
+    uh = jnp.einsum("gecd,edf->gecf", xe, we["up"])
+    h = _act_fn(s.act)(gh) * uh
+    ye = jnp.einsum("gecf,efd->gecd", h, we["down"])       # (G, E, C, D)
+    ye = shard(ye, "batch", "act_experts", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye)             # (G, g, D)
+    y = y.reshape(b, sl, d)
+    y = shard(y, "batch", "seq", None)
+
+    if "shared" in p:
+        y = y + ffn(p["shared"], x, s.act)
+    return y, aux

@@ -1,0 +1,457 @@
+"""Unified decoder-LM assembly: pattern-grouped blocks under lax.scan.
+
+The repeating ``block_pattern`` (e.g. 5x local + 1x global for gemma3,
+(rglru, rglru, attn_local) for recurrentgemma) forms one *group*; parameters
+of all groups are stacked on a leading axis and the stack is scanned —
+keeping the lowered HLO one-group-sized regardless of depth (80-layer
+qwen1.5-110b lowers the same program as an 8-layer toy).
+
+Local attention uses ring-buffer KV caches of exactly ``window`` slots
+(semantically exact for decode; memory-optimal for long_500k) — a TPU
+adaptation choice, see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import shard
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+# ------------------------------------------------------------ block specs --
+def _attn_spec(cfg: ModelConfig, local: bool) -> L.AttnSpec:
+    return L.AttnSpec(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        window=cfg.window if local else 0,
+        rope_theta=cfg.rope_theta,
+        impl=cfg.attn_impl,
+        q_chunk=cfg.attn_q_chunk,
+        kv_chunk=cfg.attn_kv_chunk,
+        unroll_inner=cfg.unroll_layers,
+    )
+
+
+def _mla_spec(cfg: ModelConfig) -> MLA.MLASpec:
+    return MLA.MLASpec(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank,
+        kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_head_dim=cfg.qk_nope_head_dim,
+        qk_rope_head_dim=cfg.qk_rope_head_dim,
+        v_head_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta,
+        norm_eps=cfg.norm_eps,
+        impl=cfg.attn_impl,
+        q_chunk=cfg.attn_q_chunk,
+        kv_chunk=cfg.attn_kv_chunk,
+        unroll_inner=cfg.unroll_layers,
+    )
+
+
+def _moe_spec(cfg: ModelConfig) -> MOE.MoESpec:
+    return MOE.MoESpec(
+        d_model=cfg.d_model,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        expert_d_ff=cfg.expert_d_ff,
+        n_shared_experts=cfg.n_shared_experts,
+        shared_d_ff=cfg.shared_d_ff,
+        capacity_factor=cfg.capacity_factor,
+        moe_group=cfg.moe_group,
+        act=cfg.act,
+    )
+
+
+def _mamba_spec(cfg: ModelConfig) -> SSM.MambaSpec:
+    return SSM.MambaSpec(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand,
+        d_conv=cfg.ssm_conv,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def _rglru_spec(cfg: ModelConfig) -> SSM.RGLRUSpec:
+    return SSM.RGLRUSpec(
+        d_model=cfg.d_model,
+        width=cfg.rglru_width,
+        n_blocks=cfg.rglru_blocks,
+        d_conv=cfg.ssm_conv,
+    )
+
+
+# ------------------------------------------------------------- block init --
+def init_block(key, cfg: ModelConfig, kind: str):
+    dt = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": L.init_rms_norm(cfg.d_model, dt)}
+    if kind in ("attn_global", "attn_local"):
+        p["attn"] = L.init_attention(k1, _attn_spec(cfg, kind == "attn_local"), dt)
+    elif kind == "mla":
+        p["attn"] = MLA.init_mla(k1, _mla_spec(cfg), dt)
+    elif kind == "moe":
+        p["attn"] = L.init_attention(k1, _attn_spec(cfg, False), dt)
+        p["norm2"] = L.init_rms_norm(cfg.d_model, dt)
+        p["moe"] = MOE.init_moe(k2, _moe_spec(cfg), dt)
+        return p
+    elif kind == "mamba2":
+        p["mixer"] = SSM.init_mamba(k1, _mamba_spec(cfg), dt)
+        return p  # mamba2 stack has no separate FFN (d_ff == 0)
+    elif kind == "rglru":
+        p["mixer"] = SSM.init_rglru(k1, _rglru_spec(cfg), dt)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff:
+        p["norm2"] = L.init_rms_norm(cfg.d_model, dt)
+        p["ffn"] = L.init_ffn(k3, cfg.d_model, cfg.d_ff, dt, cfg.act)
+    return p
+
+
+# ------------------------------------------------------ full-seq block fwd --
+def _pad_seq(t, smax: int):
+    """Pad a (B, S, ...) cache tensor out to smax slots."""
+    s = t.shape[1]
+    if smax <= s:
+        return t
+    pad = [(0, 0)] * t.ndim
+    pad[1] = (0, smax - s)
+    return jnp.pad(t, pad)
+
+
+def block_fwd(
+    p, cfg: ModelConfig, kind: str, x, positions, want_cache: bool, smax: int = 0
+):
+    """Train (want_cache=False) / prefill (True) forward of one block.
+    Returns (x, cache_or_None, aux_loss). smax sizes the decode cache
+    (>= S so decode can continue past the prefill length)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(p["norm1"], x, cfg.norm_eps)
+    cache = None
+    if kind in ("attn_global", "attn_local"):
+        spec = _attn_spec(cfg, kind == "attn_local")
+        if want_cache:
+            y, (k, v) = L.mha(p["attn"], spec, h, positions, return_kv=True)
+            cache = _ring_cache_from_prefill(cfg, kind, k, v) if kind == "attn_local" \
+                else {"k": _pad_seq(k, smax), "v": _pad_seq(v, smax)}
+        else:
+            y = L.mha(p["attn"], spec, h, positions)
+    elif kind == "mla":
+        sl = x.shape[1]
+        mask = L._attn_mask(sl, sl, 0, 0, True)
+        if want_cache:
+            y, (ckv, kr) = MLA.mla_prefill(p["attn"], _mla_spec(cfg), h, positions, mask, True)
+            cache = {"ckv": _pad_seq(ckv, smax), "kr": _pad_seq(kr, smax)}
+        else:
+            y = MLA.mla_prefill(p["attn"], _mla_spec(cfg), h, positions, mask)
+    elif kind == "moe":
+        spec = _attn_spec(cfg, False)
+        if want_cache:
+            y, (k, v) = L.mha(p["attn"], spec, h, positions, return_kv=True)
+            cache = {"k": _pad_seq(k, smax), "v": _pad_seq(v, smax)}
+        else:
+            y = L.mha(p["attn"], spec, h, positions)
+        x = x + y
+        h2 = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+        y2, aux = MOE.moe_ffn(p["moe"], _moe_spec(cfg), h2)
+        return x + y2, cache, aux
+    elif kind == "mamba2":
+        if want_cache:
+            y, (state, conv) = SSM.mamba_prefill(p["mixer"], _mamba_spec(cfg), h, True)
+            cache = {"state": state, "conv": conv}
+        else:
+            y = SSM.mamba_prefill(p["mixer"], _mamba_spec(cfg), h)
+        return x + y, cache, aux
+    elif kind == "rglru":
+        if want_cache:
+            y, (state, conv) = SSM.rglru_prefill(p["mixer"], _rglru_spec(cfg), h, True)
+            cache = {"state": state, "conv": conv}
+        else:
+            y = SSM.rglru_prefill(p["mixer"], _rglru_spec(cfg), h)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "ffn" in p:
+        x = x + L.ffn(p["ffn"], L.rms_norm(p["norm2"], x, cfg.norm_eps), cfg.act)
+    return x, cache, aux
+
+
+def _ring_cache_from_prefill(cfg: ModelConfig, kind: str, k, v):
+    """Convert full prefill K/V into a window-sized ring buffer."""
+    w = cfg.window
+    b, sl, kh, hd = k.shape
+    if sl >= w:
+        absi = jnp.arange(sl - w, sl)
+        slots = absi % w
+        rk = jnp.zeros((b, w, kh, hd), k.dtype).at[:, slots].set(k[:, sl - w :])
+        rv = jnp.zeros((b, w, kh, hd), v.dtype).at[:, slots].set(v[:, sl - w :])
+        pos_idx = jnp.zeros((w,), jnp.int32).at[slots].set(absi.astype(jnp.int32))
+    else:
+        pad = w - sl
+        rk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_idx = jnp.concatenate(
+            [jnp.arange(sl, dtype=jnp.int32), jnp.full((pad,), -1, jnp.int32)]
+        )
+    return {"k": rk, "v": rv, "pos_idx": pos_idx}
+
+
+# -------------------------------------------------------------- decode fwd --
+def block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
+    """One-token decode. Returns (x, new_cache)."""
+    h = L.rms_norm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn_global", "moe"):
+        spec = _attn_spec(cfg, False)
+        y, ck, cv = L.mha_decode(p["attn"], spec, h, cache["k"], cache["v"], pos)
+        cache = {"k": ck, "v": cv}
+    elif kind == "attn_local":
+        y, cache = _local_decode(p["attn"], cfg, h, cache, pos)
+    elif kind == "mla":
+        y, ckv, kr = MLA.mla_decode(p["attn"], _mla_spec(cfg), h, cache["ckv"], cache["kr"], pos)
+        cache = {"ckv": ckv, "kr": kr}
+    elif kind == "mamba2":
+        y, st, cv = SSM.mamba_decode(p["mixer"], _mamba_spec(cfg), h, cache["state"], cache["conv"])
+        cache = {"state": st, "conv": cv}
+    elif kind == "rglru":
+        y, st, cv = SSM.rglru_decode(p["mixer"], _rglru_spec(cfg), h, cache["state"], cache["conv"])
+        cache = {"state": st, "conv": cv}
+    else:
+        raise ValueError(kind)
+    if kind == "moe":
+        x = x + y
+        h2 = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+        y2, _ = MOE.moe_ffn(p["moe"], _moe_spec(cfg), h2)
+        return x + y2, cache
+    x = x + y
+    if "ffn" in p:
+        x = x + L.ffn(p["ffn"], L.rms_norm(p["norm2"], x, cfg.norm_eps), cfg.act)
+    return x, cache
+
+
+def _local_decode(p, cfg: ModelConfig, h, cache, pos):
+    """Ring-buffer sliding-window decode."""
+    spec = _attn_spec(cfg, True)
+    b, one, _ = h.shape
+    w = cfg.window
+    q = L.dense(p["wq"], h).reshape(b, one, spec.n_heads, spec.head_dim)
+    k = L.dense(p["wk"], h).reshape(b, one, spec.n_kv_heads, spec.head_dim)
+    v = L.dense(p["wv"], h).reshape(b, one, spec.n_kv_heads, spec.head_dim)
+    pvec = jnp.full((b, one), pos, jnp.int32)
+    q = L.apply_rope(q, pvec, spec.rope_theta)
+    k = L.apply_rope(k, pvec, spec.rope_theta)
+    slot = jax.lax.rem(pos, w)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], L._kv_quant(k, cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], L._kv_quant(v, cache["v"].dtype), slot, axis=1)
+    pidx = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos_idx"], jnp.full((1,), pos, jnp.int32), slot, axis=0
+    )
+    ok = (pidx <= pos) & (pidx > pos - w) & (pidx >= 0)              # (w,)
+    rep = spec.n_heads // spec.n_kv_heads
+    qg = q.reshape(b, one, spec.n_kv_heads, rep, spec.head_dim)
+    scores = jnp.einsum(
+        "bqkrh,bskh->bkrqs", qg.astype(jnp.float32), L._kv_dequant(ck).astype(jnp.float32))
+    scores = scores / (spec.head_dim ** 0.5)
+    scores = jnp.where(ok[None, None, None, None, :], scores, -jnp.inf)
+    attn = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum(
+        "bkrqs,bskh->bqkrh", attn, L._kv_dequant(cv).astype(jnp.float32)
+    ).astype(h.dtype).reshape(b, one, spec.n_heads * spec.head_dim)
+    y = L.dense(p["wo"], o, in_logical="w_in2", out_logical="w_out2")
+    return y, {"k": ck, "v": cv, "pos_idx": pidx}
+
+
+# ----------------------------------------------------------- cache specs ---
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, smax: int, dtype):
+    """ShapeDtypeStruct pytree for one block's decode cache."""
+    hd = cfg.resolved_head_dim
+    kv_dt = jnp.int8 if cfg.kv_cache_quant else dtype
+    if kind in ("attn_global", "moe"):
+        shp = (batch, smax, cfg.n_kv_heads, hd)
+        return {"k": jax.ShapeDtypeStruct(shp, kv_dt), "v": jax.ShapeDtypeStruct(shp, kv_dt)}
+    if kind == "attn_local":
+        w = cfg.window
+        shp = (batch, w, cfg.n_kv_heads, hd)
+        return {
+            "k": jax.ShapeDtypeStruct(shp, kv_dt),
+            "v": jax.ShapeDtypeStruct(shp, kv_dt),
+            "pos_idx": jax.ShapeDtypeStruct((w,), jnp.int32),
+        }
+    if kind == "mla":
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, smax, cfg.kv_lora_rank), dtype),
+            "kr": jax.ShapeDtypeStruct((batch, smax, cfg.qk_rope_head_dim), dtype),
+        }
+    if kind == "mamba2":
+        s = _mamba_spec(cfg)
+        return {
+            "state": jax.ShapeDtypeStruct((batch, s.n_heads, s.d_state, s.head_dim), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, s.conv_channels), cfg.param_dtype),
+        }
+    if kind == "rglru":
+        s = _rglru_spec(cfg)
+        return {
+            "state": jax.ShapeDtypeStruct((batch, s.width), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, s.width), cfg.param_dtype),
+        }
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------ full model ---
+def init_decoder(key, cfg: ModelConfig):
+    cfg.validate()
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[1], cfg.d_model, cfg.padded_vocab, cfg.param_dtype)
+    # stacked group params
+    groups = []
+    ki = 2
+    for g in range(cfg.n_groups):
+        group = tuple(
+            init_block(keys[ki + g * cfg.pattern_len + i], cfg, kind)
+            for i, kind in enumerate(cfg.block_pattern)
+        )
+        groups.append(group)
+    if groups:
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    params["tail"] = tuple(
+        init_block(keys[ki + cfg.n_groups * cfg.pattern_len + i], cfg, kind)
+        for i, kind in enumerate(cfg.tail_blocks)
+    )
+    return params
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def decoder_hidden(params, cfg: ModelConfig, x, positions):
+    """Training forward through all blocks. Returns (hidden, aux_loss)."""
+
+    def group_body(carry, gp):
+        x, aux = carry
+        # SP on the scan carry: the remat-saved residual buffer shards over
+        # the model axis between groups (gathered lazily inside the block)
+        x = shard(x, "batch", "residual_seq", None)
+        for i, kind in enumerate(cfg.block_pattern):
+            x, _, a = block_fwd(gp[i], cfg, kind, x, positions, want_cache=False)
+            aux = aux + a
+        x = shard(x, "batch", "residual_seq", None)
+        return (x, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.n_groups:
+        if cfg.unroll_layers:
+            for gi in range(cfg.n_groups):
+                gp = jax.tree.map(lambda p: p[gi], params["blocks"])
+                (x, aux0), _ = _remat(cfg, group_body)((x, aux0), gp)
+        else:
+            (x, aux0), _ = jax.lax.scan(_remat(cfg, group_body), (x, aux0), params["blocks"])
+    for i, kind in enumerate(cfg.tail_blocks):
+        x, _, a = block_fwd(params["tail"][i], cfg, kind, x, positions, want_cache=False)
+        aux0 = aux0 + a
+    return L.rms_norm(params["final_norm"], x, cfg.norm_eps), aux0
+
+
+def decoder_prefill(params, cfg: ModelConfig, x, positions, smax: int = 0):
+    """Prefill forward; returns (hidden, caches) where caches =
+    (scanned: tuple-per-pattern-pos with leading G, tail: tuple).
+    smax >= S sizes the KV caches for continued decoding."""
+    smax = max(smax, x.shape[1])
+
+    def group_body(x, gp):
+        caches = []
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c, _ = block_fwd(gp[i], cfg, kind, x, positions, want_cache=True, smax=smax)
+            caches.append(c)
+        return x, tuple(caches)
+
+    scanned = None
+    if cfg.n_groups:
+        if cfg.unroll_layers:
+            outs = []
+            for gi in range(cfg.n_groups):
+                gp = jax.tree.map(lambda p: p[gi], params["blocks"])
+                x, c = _remat(cfg, group_body)(x, gp)
+                outs.append(c)
+            scanned = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, scanned = jax.lax.scan(_remat(cfg, group_body), x, params["blocks"])
+    tail = []
+    for i, kind in enumerate(cfg.tail_blocks):
+        x, c, _ = block_fwd(params["tail"][i], cfg, kind, x, positions, want_cache=True, smax=smax)
+        tail.append(c)
+    return L.rms_norm(params["final_norm"], x, cfg.norm_eps), (scanned, tuple(tail))
+
+
+def decoder_decode(params, cfg: ModelConfig, caches, x, pos):
+    """One-token decode; returns (hidden, new_caches)."""
+    scanned, tail = caches
+
+    def group_body(x, inp):
+        gp, gc = inp
+        new = []
+        for i, kind in enumerate(cfg.block_pattern):
+            x, nc = block_decode(gp[i], cfg, kind, x, gc[i], pos)
+            new.append(nc)
+        return x, tuple(new)
+
+    new_scanned = None
+    if cfg.n_groups:
+        if cfg.unroll_layers:
+            outs = []
+            for gi in range(cfg.n_groups):
+                gp = jax.tree.map(lambda p: p[gi], params["blocks"])
+                gc = jax.tree.map(lambda c: c[gi], scanned)
+                x, nc = group_body(x, (gp, gc))
+                outs.append(nc)
+            new_scanned = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_scanned = jax.lax.scan(group_body, x, (params["blocks"], scanned))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_blocks):
+        x, nc = block_decode(params["tail"][i], cfg, kind, x, tail[i], pos)
+        new_tail.append(nc)
+    return L.rms_norm(params["final_norm"], x, cfg.norm_eps), (new_scanned, tuple(new_tail))
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], hidden)
+    return shard(L.dense(params["lm_head"], hidden), "batch", "seq", "act_vocab")
+
+
+def decoder_cache_specs(cfg: ModelConfig, batch: int, smax: int):
+    dt = cfg.param_dtype
+    scanned = None
+    if cfg.n_groups:
+        per_pos = tuple(
+            block_cache_spec(cfg, kind, batch, smax, dt) for kind in cfg.block_pattern
+        )
+        scanned = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_groups, *s.shape), s.dtype), per_pos
+        )
+    tail = tuple(block_cache_spec(cfg, kind, batch, smax, dt) for kind in cfg.tail_blocks)
+    return (scanned, tail)

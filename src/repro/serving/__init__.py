@@ -1,0 +1,4 @@
+from repro.serving.kv_dedup import KVBlockCache, PrefixCacheStats
+from repro.serving.server import BatchedServer, ServeConfig
+
+__all__ = ["KVBlockCache", "PrefixCacheStats", "BatchedServer", "ServeConfig"]

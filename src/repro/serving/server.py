@@ -1,0 +1,155 @@
+"""Batched serving driver with cluster-wide KV prefix-cache dedup.
+
+Single-host demo-scale driver (reduced configs) that exercises the real
+logic end to end: chain-fingerprint prefix matching against the
+shared-nothing block store, KV reconstruction from stored block payloads,
+prefill only of the uncached suffix, greedy decode, block publication, and
+pin/evict lifecycle. The production path (launch/serve.py) lowers the same
+decode_step under the 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DedupCluster, Fingerprint, ReadError
+from repro.serving.kv_dedup import KVBlockCache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 256
+    block_tokens: int = 16
+    max_cached_blocks: int = 4096
+
+
+def _kv_to_bytes(k: np.ndarray, v: np.ndarray) -> bytes:
+    """bfloat16 has no native numpy savez support; ship uint16 views."""
+    bf16 = k.dtype.name == "bfloat16"
+    if bf16:
+        k, v = k.view(np.uint16), v.view(np.uint16)
+    buf = io.BytesIO()
+    np.savez(buf, k=k, v=v, bf16=np.asarray(bf16))
+    return buf.getvalue()
+
+
+def _kv_from_bytes(data: bytes) -> tuple[np.ndarray, np.ndarray]:
+    z = np.load(io.BytesIO(data))
+    k, v = z["k"], z["v"]
+    if bool(z["bf16"]):
+        import ml_dtypes
+
+        k = k.view(ml_dtypes.bfloat16)
+        v = v.view(ml_dtypes.bfloat16)
+    return k, v
+
+
+class BatchedServer:
+    """Serves a decoder LM whose every block is plain {k, v} attention
+    (reduced dense configs)."""
+
+    def __init__(self, model, params, cluster: DedupCluster, cfg: ServeConfig | None = None):
+        assert not model.cfg.enc_dec and set(model.cfg.block_pattern) == {"attn_global"}, \
+            "demo server supports plain global-attention decoders"
+        self.model = model
+        self.params = params
+        self.cfg = cfg or ServeConfig()
+        self.kv = KVBlockCache(cluster, self.cfg.block_tokens)
+        self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------ internals
+    def _empty_caches(self):
+        from repro.configs.base import ShapeSpec
+
+        spec = ShapeSpec("serve", self.cfg.max_len, 1, "decode")
+        specs = self.model.cache_specs(spec)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def _load_prefix(self, caches, fps: list[Fingerprint]):
+        """Install stored KV block payloads into the cache tensors."""
+        scanned, tail = caches
+        k = np.array(scanned[0]["k"])   # writable host copies
+        v = np.array(scanned[0]["v"])
+        bt = self.cfg.block_tokens
+        for i, fp in enumerate(fps):
+            bk, bv = _kv_from_bytes(self.kv.get_block(fp))
+            k[:, :, i * bt : (i + 1) * bt] = bk
+            v[:, :, i * bt : (i + 1) * bt] = bv
+        return (
+            ({"k": jnp.asarray(k), "v": jnp.asarray(v)},),
+            tail,
+        )
+
+    def _publish_blocks(self, caches, tokens: list[int], start_block: int):
+        """Serialize newly computed KV blocks and publish to the cluster."""
+        scanned, _ = caches
+        k = np.asarray(scanned[0]["k"])
+        v = np.asarray(scanned[0]["v"])
+        bt = self.cfg.block_tokens
+        fps = self.kv.block_fps(tokens)
+        new_fps, payloads = [], []
+        for i in range(start_block, len(fps)):
+            bk = k[:, :, i * bt : (i + 1) * bt]
+            bv = v[:, :, i * bt : (i + 1) * bt]
+            new_fps.append(fps[i])
+            payloads.append(_kv_to_bytes(bk, bv))
+        self.kv.put_blocks(new_fps, payloads)
+        return fps[:start_block] + new_fps
+
+    # --------------------------------------------------------------- public
+    def handle(self, prompt: list[int], gen_tokens: int = 8) -> dict:
+        """Process one request. Returns {tokens, reused_tokens, computed_tokens}."""
+        assert len(prompt) + gen_tokens <= self.cfg.max_len
+        n_cached, matched = self.kv.match_prefix(prompt)
+        if n_cached >= len(prompt):
+            # Always recompute at least the final prompt token: its logits
+            # are needed to start generation (cache stores KV, not logits).
+            self.kv.release_blocks(matched[-1:])
+            matched = matched[:-1]
+            n_cached -= self.kv.block_tokens
+        caches = self._empty_caches()
+        if matched:
+            try:
+                caches = self._load_prefix(caches, matched)
+            except ReadError:
+                # best-effort cache: block bytes lost (e.g. node death with
+                # replicas=1) -> treat as a miss and recompute everything
+                self.kv.release_blocks(matched)
+                matched, n_cached = [], 0
+                caches = self._empty_caches()
+
+        # prefill the uncached suffix one token at a time (decode path),
+        # so the same jitted step serves both phases.
+        logits = None
+        for t in range(n_cached, len(prompt)):
+            tok = jnp.asarray([[prompt[t]]], jnp.int32)
+            logits, caches = self._decode(self.params, caches, tok, jnp.int32(t))
+
+        all_fps = self._publish_blocks(caches, prompt, len(matched))
+
+        out: list[int] = []
+        pos = len(prompt)
+        tok_next = int(jnp.argmax(logits[0, -1])) if logits is not None else prompt[-1]
+        for _ in range(gen_tokens):
+            out.append(tok_next)
+            tok = jnp.asarray([[tok_next]], jnp.int32)
+            logits, caches = self._decode(self.params, caches, tok, jnp.int32(pos))
+            tok_next = int(jnp.argmax(logits[0, -1]))
+            pos += 1
+
+        self.kv.release_blocks(all_fps)
+        self.kv.evict(self.cfg.max_cached_blocks)
+        return {
+            "tokens": out,
+            "reused_tokens": n_cached,
+            "computed_tokens": len(prompt) - n_cached + gen_tokens,
+        }

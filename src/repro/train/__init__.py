@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, build_train_step, train_loop
+
+__all__ = ["TrainConfig", "build_train_step", "train_loop"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests must see exactly 1 CPU device (the dry-run sets 512 itself,
+# in its own process) — so no XLA_FLAGS here, per the launcher contract.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,86 @@
+"""Chunked (flash-style) attention must match the dense path exactly."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.layers import AttnSpec, chunked_attention, init_attention, mha
+
+RNG = np.random.default_rng(3)
+
+
+def _spec(**kw):
+    base = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
+    base.update(kw)
+    return AttnSpec(**base)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 8), (False, 0)])
+@pytest.mark.parametrize("q_chunk,kv_chunk", [(8, 8), (16, 4), (32, 32)])
+def test_chunked_matches_dense_softmax(causal, window, q_chunk, kv_chunk):
+    b, s, kh, rep, hd = 2, 32, 2, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, kh, rep, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kh, hd)), jnp.float32)
+
+    out = chunked_attention(q, k, v, causal=causal, window=window, mask_offset=0,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk, scale=0.25)
+    # dense reference
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", q, k) * 0.25
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok = ok & (ki <= qi)
+    if window:
+        ok = ok & (ki > qi - window)
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.moveaxis(jnp.einsum("bkrqs,bskh->bkrqh", w, v), 3, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_unroll_inner_matches_scan():
+    b, s, kh, rep, hd = 1, 32, 2, 1, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, kh, rep, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kh, hd)), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, window=0, mask_offset=0,
+                          q_chunk=8, kv_chunk=8, scale=0.25, unroll_inner=False)
+    bu = chunked_attention(q, k, v, causal=True, window=0, mask_offset=0,
+                           q_chunk=8, kv_chunk=8, scale=0.25, unroll_inner=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bu), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "gemma3-12b", "minicpm3-4b"])
+def test_model_level_dense_vs_chunked(arch):
+    cfg_d = get_config(arch).reduced()
+    cfg_c = dataclasses.replace(cfg_d, attn_impl="chunked", attn_q_chunk=16, attn_kv_chunk=8)
+    md, mc = build_model(cfg_d), build_model(cfg_c)
+    params = md.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg_d.vocab, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg_d.vocab, (2, 32)), jnp.int32),
+    }
+    ld, _ = md.loss_fn(params, batch)
+    lc, _ = mc.loss_fn(params, batch)
+    assert abs(float(ld) - float(lc)) < 2e-3, (float(ld), float(lc))
+
+
+def test_v_head_dim_differs_from_qk():
+    """MLA case: v head dim != qk head dim."""
+    b, s, kh, rep, hd, vd = 1, 16, 3, 1, 24, 8
+    q = jnp.asarray(RNG.standard_normal((b, s, kh, rep, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kh, vd)), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, window=0, mask_offset=0,
+                            q_chunk=8, kv_chunk=8, scale=0.2)
+    assert out.shape == (b, s, kh, rep, vd)
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,147 @@
+"""Asynchronous tagged consistency: crash windows, repair, GC safety."""
+
+import os
+
+import pytest
+
+from repro.core import (
+    ChunkingSpec,
+    DedupCluster,
+    TransactionAbort,
+    WriteError,
+)
+from repro.core.dmshard import INVALID, VALID
+
+CH = ChunkingSpec("fixed", 1024)
+
+
+def mk(n=3, replicas=1):
+    return DedupCluster.create(n, replicas=replicas, chunking=CH)
+
+
+def test_flags_flip_asynchronously():
+    c = mk()
+    c.write_object("a", os.urandom(4096))
+    invalid_now = sum(len(n.shard.invalid_fps()) for n in c.nodes.values())
+    assert invalid_now == 4, "flags must still be INVALID right after the write"
+    c.tick(2)
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 0
+
+
+def test_crash_before_flip_leaves_invalid_flags_then_repair_on_dup_write():
+    c = mk()
+    data = os.urandom(4096)
+    c.write_object("x", data)        # flips still queued
+    for n in c.nodes.values():
+        n.crash()
+    for n in c.nodes.values():
+        n.restart()
+    assert sum(n.cm.flips_lost_to_crash for n in c.nodes.values()) == 4
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 4
+    # duplicate write triggers the paper's consistency check -> repair
+    c.write_object("y", data)
+    assert sum(n.stats.repairs for n in c.nodes.values()) == 4
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 0
+    assert c.read_object("x") == data and c.read_object("y") == data
+
+
+def test_read_path_repairs_invalid_flags():
+    c = mk()
+    data = os.urandom(2048)
+    c.write_object("x", data)
+    for n in c.nodes.values():
+        n.crash(); n.restart()
+    assert c.read_object("x") == data
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 0
+
+
+def test_aborted_txn_leaves_garbage_then_gc_collects():
+    c = mk()
+    def inj(event, ctx):
+        if event == "before_chunk_op" and ctx["index"] == 3:
+            raise TransactionAbort("fail")
+    c.fault_injector = inj
+    with pytest.raises(WriteError):
+        c.write_object("bad", os.urandom(8192))
+    c.fault_injector = None
+    garbage = sum(len(n.shard.invalid_fps()) for n in c.nodes.values())
+    assert garbage == 3, "3 stored chunks of the failed txn must be invalid"
+    c.tick(20); c.run_gc()
+    c.tick(20)
+    removed = sum(len(v) for v in c.run_gc().values())
+    assert removed == 3
+    assert c.unique_bytes_stored() == 0
+
+
+def test_gc_never_collects_referenced_chunks():
+    c = mk()
+    data = os.urandom(8192)
+    c.write_object("keep", data)
+    c.tick(2)
+    for _ in range(5):
+        c.tick(50)
+        c.run_gc()
+    assert c.read_object("keep") == data
+
+
+def test_gc_cross_match_spares_rereferenced_chunks():
+    """A fingerprint that goes invalid but is re-referenced before the GC
+    threshold expires must be spared (the paper's cross-matching)."""
+    c = mk()
+    data = os.urandom(1024)
+    c.write_object("a", data)
+    c.tick(2)
+    c.delete_object("a")               # refcount 0 -> tombstone (flag INVALID)
+    c.run_gc()                         # phase 1: held set
+    c.tick(5)
+    c.write_object("b", data)          # re-reference repairs the entry
+    c.tick(20)
+    removed = sum(len(v) for v in c.run_gc().values())
+    assert removed == 0
+    spared = sum(n.gc.spared for n in c.nodes.values())
+    assert spared == 1
+    assert c.read_object("b") == data
+
+
+def test_primary_crash_mid_txn_rolls_back_reachable_refs():
+    c = mk(4)
+    data = os.urandom(8192)
+    c.write_object("base", data)
+    c.tick(2)
+    # now write a duplicate object but crash the primary before OMAP commit
+    def inj(event, ctx):
+        if event == "before_omap" and ctx["name"] == "dup":
+            raise TransactionAbort("primary dies before OMAP write")
+    c.fault_injector = inj
+    with pytest.raises(WriteError):
+        c.write_object("dup", data)
+    c.fault_injector = None
+    # rollback: refcounts back to 1 (only "base" references them)
+    for node in c.nodes.values():
+        for fp, e in node.shard.cit.items():
+            assert e.refcount == 1
+    assert c.read_object("base") == data
+
+
+def test_flag_semantics_constants():
+    assert INVALID == 0 and VALID == 1
+
+
+def test_gc_crash_race_must_not_collect_committed_chunks():
+    """Regression (found by hypothesis): write commits -> GC holds the
+    still-invalid fps -> crash loses the async flips -> after the aging
+    threshold the cross-match sees 'no change' and would delete LIVE data.
+    The sweep must consistency-check referenced entries instead."""
+    c = mk()
+    data = os.urandom(2048)
+    c.write_object("live", data)     # committed; flips queued
+    c.run_gc()                        # phase 1 observes invalid fps
+    for n in c.nodes.values():
+        n.crash(); n.restart()        # flips lost forever
+    c.tick(20)                        # age past threshold (no flips happen)
+    removed = sum(len(v) for v in c.run_gc().values())
+    assert removed == 0, "GC deleted committed, referenced chunks"
+    assert c.read_object("live") == data
+    # and the sweep repaired the flags via the consistency check
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 0
+    assert sum(n.gc.repaired for n in c.nodes.values()) == 2

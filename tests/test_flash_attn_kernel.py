@@ -1,0 +1,73 @@
+"""Pallas flash-attention kernel vs dense softmax oracle (interpret mode)."""
+
+import math
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import flash_attention_pallas
+
+RNG = np.random.default_rng(11)
+
+
+def _dense_ref(q, k, v, causal, window, scale):
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    rep = h // kh
+    kx = jnp.repeat(k, rep, axis=2)
+    vx = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        ok = ok & (ki <= qi)
+    if window:
+        ok = ok & (ki > qi - window)
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", w, vx.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (8, 1)])
+def test_flash_matches_dense(causal, window, h, kh):
+    b, sq, hd = 2, 256, 32
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 blk_q=64, blk_kv=64, interpret=True)
+    ref = _dense_ref(q, k, v, causal, window, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    b, sq, h, kh, hd = 1, 128, 2, 2, 64
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd))).astype(dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sq, kh, hd))).astype(dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sq, kh, hd))).astype(dtype)
+    out = flash_attention_pallas(q, k, v, blk_q=64, blk_kv=64, interpret=True)
+    ref = _dense_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), True, 0, 1.0 / math.sqrt(hd))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=tol, atol=tol)
+    assert out.dtype == dtype
+
+
+def test_flash_cross_block_shapes():
+    """Non-square: Sq != Skv (e.g. suffix prefill against a longer cache)."""
+    b, sq, skv, h, kh, hd = 1, 64, 256, 2, 1, 32
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, skv, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, skv, kh, hd)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=False, blk_q=32, blk_kv=64,
+                                 interpret=True)
+    ref = _dense_ref(q, k, v, False, 0, 1.0 / math.sqrt(hd))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)

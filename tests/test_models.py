@@ -1,0 +1,159 @@
+"""Per-arch smoke tests (reduced configs) + decode-path consistency."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.configs.base import ShapeSpec
+from repro.models import build_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_for(m, shape, rng):
+    specs = m.input_specs(shape)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, m.cfg.vocab, size=s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shape = ShapeSpec("t", 32, 2, "train")
+    batch = _batch_for(m, shape, rng)
+    loss, metrics = m.loss_fn(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(metrics["tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS if ARCHS[a].has_decode])
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    dshape = ShapeSpec("d", 32, 2, "decode")
+    cs = m.cache_specs(dshape)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cs,
+                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    logits, caches2 = m.decode_step(params, caches, jnp.ones((2, 1), jnp.int32), jnp.int32(3))
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    # cache structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2.5-32b", "gemma3-12b", "mamba2-1.3b", "recurrentgemma-2b", "minicpm3-4b"]
+)
+def test_prefill_decode_consistency(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    S_PRE, S_ALL = 16, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, S_ALL)), jnp.int32)
+    _, caches = m.prefill(params, {"tokens": toks[:, :S_PRE]}, cache_len=S_ALL)
+    lg = None
+    for t in range(S_PRE, S_ALL):
+        lg, caches = m.decode_step(params, caches, toks[:, t:t + 1], jnp.int32(t))
+    ref_logits, _ = m.prefill(params, {"tokens": toks}, cache_len=S_ALL)
+    a = np.asarray(lg[:, 0], np.float32)
+    b = np.asarray(ref_logits[:, 0], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6)
+    assert err < 0.05, (arch, err)
+
+
+def test_moe_consistency_without_capacity_drops():
+    cfg = dataclasses.replace(get_config("qwen2-moe-a2.7b").reduced(), capacity_factor=16.0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 24)), jnp.int32)
+    _, caches = m.prefill(params, {"tokens": toks[:, :16]}, cache_len=24)
+    lg = None
+    for t in range(16, 24):
+        lg, caches = m.decode_step(params, caches, toks[:, t:t + 1], jnp.int32(t))
+    ref_logits, _ = m.prefill(params, {"tokens": toks}, cache_len=24)
+    err = np.max(np.abs(np.asarray(lg[:, 0], np.float32) - np.asarray(ref_logits[:, 0], np.float32)))
+    err /= np.max(np.abs(np.asarray(ref_logits[:, 0], np.float32))) + 1e-6
+    assert err < 0.05, err
+
+
+def test_unroll_layers_equivalence():
+    """The dry-run costing variant (python loop) must equal lax.scan."""
+    cfg = get_config("gemma3-12b").reduced()
+    m1 = build_model(cfg)
+    m2 = build_model(dataclasses.replace(cfg, unroll_layers=True))
+    params = m1.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32),
+    }
+    l1, _ = m1.loss_fn(params, batch)
+    l2, _ = m2.loss_fn(params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-3, (float(l1), float(l2))
+
+
+def test_local_attention_ring_cache_exactness():
+    """Ring-buffer local cache must match full recompute past one window."""
+    cfg = dataclasses.replace(
+        get_config("gemma3-12b").reduced(), window=8,
+        block_pattern=("attn_local",), n_layers=2,
+    )
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(1)
+    S_ALL = 32  # 4 windows deep
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, S_ALL)), jnp.int32)
+    _, caches = m.prefill(params, {"tokens": toks[:, :16]}, cache_len=S_ALL)
+    lg = None
+    for t in range(16, S_ALL):
+        lg, caches = m.decode_step(params, caches, toks[:, t:t + 1], jnp.int32(t))
+    ref_logits, _ = m.prefill(params, {"tokens": toks}, cache_len=S_ALL)
+    a = np.asarray(lg[:, 0], np.float32)
+    b = np.asarray(ref_logits[:, 0], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6)
+    assert err < 0.05, err
+
+
+def test_shape_applicability_table():
+    # 40 cells: count runnable vs skipped and pin expectations
+    runnable = {(a, s) for a in ALL_ARCHS for s in SHAPES
+                if shape_applicable(ARCHS[a], s)[0]}
+    skipped = {(a, s) for a in ALL_ARCHS for s in SHAPES} - runnable
+    assert ("mamba2-1.3b", "long_500k") in runnable
+    assert ("gemma3-12b", "long_500k") in runnable
+    assert ("recurrentgemma-2b", "long_500k") in runnable
+    assert ("qwen2.5-32b", "long_500k") in skipped
+    assert ("qwen1.5-110b", "long_500k") in skipped
+    assert ("whisper-tiny", "long_500k") in skipped
+    assert len(runnable) + len(skipped) == 40
+
+
+def test_vocab_padding_is_sharding_friendly_and_masked():
+    cfg = get_config("mamba2-1.3b")
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab
+    red = cfg.reduced()
+    m = build_model(red)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, red.vocab, (1, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, red.vocab, (1, 16)), jnp.int32),
+    }
+    loss, _ = m.loss_fn(params, batch)
+    assert np.isfinite(float(loss))

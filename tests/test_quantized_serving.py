@@ -1,0 +1,61 @@
+"""w8a16 weight quantization + int8 KV cache serving modes."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.models import build_model
+
+
+def _greedy_decode(m, params, toks, cfg, n=24):
+    cs = m.cache_specs(ShapeSpec("d", 32, 2, "decode"))
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cs,
+                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    lg = None
+    for t in range(n):
+        lg, caches = m.decode_step(params, caches, toks[:, t:t + 1], jnp.int32(t))
+    return np.asarray(lg[:, 0], np.float32)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "minicpm3-4b"])
+def test_w8_weights_close_to_bf16(arch):
+    cfg = get_config(arch).reduced()
+    cfg_q = dataclasses.replace(cfg, weight_quant=True)
+    mb, mq = build_model(cfg), build_model(cfg_q)
+    params_b = mb.init(jax.random.PRNGKey(0))
+    params_q = mq.init(jax.random.PRNGKey(0))
+    # quantized tree carries int8 weights + scales
+    n_int8 = sum(1 for x in jax.tree.leaves(params_q) if x.dtype == jnp.int8)
+    assert n_int8 > 0
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 24)), jnp.int32)
+    a = _greedy_decode(mb, params_b, toks, cfg)
+    b = _greedy_decode(mq, params_q, toks, cfg_q)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6)
+    assert err < 0.2, err
+    assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.5
+
+
+def test_w8_and_kv8_combined():
+    cfg = dataclasses.replace(get_config("qwen2.5-32b").reduced(),
+                              weight_quant=True, kv_cache_quant=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    lg = _greedy_decode(m, params, toks, cfg, n=16)
+    assert np.isfinite(lg).all()
+
+
+def test_w8_halves_weight_bytes():
+    cfg = get_config("qwen2.5-32b").reduced()
+    cfg_q = dataclasses.replace(cfg, weight_quant=True)
+    size = lambda m: sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(m.param_specs()))
+    assert size(build_model(cfg_q)) < 0.65 * size(build_model(cfg))

@@ -1,0 +1,108 @@
+"""Storage rebalancing & elasticity: the paper's Fig 1(b) problem solved by
+content placement — chunks move, metadata locations never do."""
+
+import os
+
+import pytest
+
+from repro.core import ChunkingSpec, DedupCluster
+from repro.core.placement import place
+
+CH = ChunkingSpec("fixed", 1024)
+
+
+def _fill(c, n_objects=12, size=8192, seed=0):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    objs = {}
+    for i in range(n_objects):
+        data = rng.bytes(size)
+        name = f"obj{i}"
+        c.write_object(name, data)
+        objs[name] = data
+    c.tick(2)
+    return objs
+
+
+def test_add_node_preserves_all_reads():
+    c = DedupCluster.create(4, chunking=CH)
+    objs = _fill(c)
+    c.add_node()
+    for name, data in objs.items():
+        assert c.read_object(name) == data
+
+
+def test_remove_node_preserves_all_reads():
+    c = DedupCluster.create(5, chunking=CH)
+    objs = _fill(c)
+    c.remove_node("oss4")
+    for name, data in objs.items():
+        assert c.read_object(name) == data
+
+
+def test_movement_is_minimal():
+    """HRW: adding 1 node to N=7 should move ~1/8 of chunks, not reshuffle."""
+    c = DedupCluster.create(7, chunking=CH)
+    _fill(c, n_objects=40, size=4096)
+    total_chunks = sum(len(n.chunk_store) for n in c.nodes.values())
+    c.add_node()
+    frac = c.stats.rebalance_chunks_moved / total_chunks
+    assert frac < 0.30, f"moved {frac:.0%}, expected ~1/8"
+
+
+def test_no_dedup_metadata_location_updates_needed():
+    """After rebalance, every CIT entry is findable purely via place(fp, map)
+    — the paper's claim that dedup metadata needs no location rewrite."""
+    c = DedupCluster.create(4, chunking=CH)
+    _fill(c)
+    c.add_node()
+    for nid, node in c.nodes.items():
+        for fp in node.shard.cit:
+            assert nid in place(fp, c.cmap), (
+                f"CIT entry {fp} on {nid} is off-placement after rebalance"
+            )
+        for fp in node.chunk_store:
+            assert nid in place(fp, c.cmap)
+
+
+def test_chunk_distribution_rebalances():
+    c = DedupCluster.create(3, chunking=CH)
+    _fill(c, n_objects=60, size=4096)
+    c.add_node()
+    dist = c.chunk_distribution()
+    assert dist["oss3"] > 0, "new node must receive chunks"
+    avg = sum(dist.values()) / len(dist)
+    assert all(v > 0.3 * avg for v in dist.values()), dist
+
+
+def test_dedup_survives_rebalance():
+    c = DedupCluster.create(3, chunking=CH)
+    data = os.urandom(8192)
+    c.write_object("a", data)
+    c.tick(2)
+    c.add_node()
+    c.write_object("b", data)      # must still dedup against moved chunks
+    assert c.unique_bytes_stored() == 8192
+    assert c.read_object("b") == data
+
+
+def test_scrub_restores_replication_after_permanent_loss():
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    objs = _fill(c)
+    victim = list(c.nodes)[0]
+    c.nodes[victim].chunk_store.clear()        # simulate disk loss
+    c.nodes[victim].shard.cit.clear()
+    restored = c.scrub()
+    assert restored > 0
+    for name, data in objs.items():
+        assert c.read_object(name) == data
+
+
+def test_weighted_elastic_scaling():
+    c = DedupCluster.create(4, chunking=CH)
+    _fill(c, n_objects=40)
+    c.set_map(c.cmap.with_node("big", weight=3.0))
+    dist = c.chunk_distribution()
+    avg_small = sum(v for k, v in dist.items() if k != "big") / 4
+    assert dist["big"] > 1.5 * avg_small, dist

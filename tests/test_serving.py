@@ -1,0 +1,78 @@
+"""Serving with cluster-wide KV prefix-cache dedup."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import ChunkingSpec, DedupCluster
+from repro.serving import BatchedServer, KVBlockCache, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = get_config("qwen2.5-32b").reduced()
+    from repro.models import build_model
+
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    cluster = DedupCluster.create(3, chunking=ChunkingSpec("fixed", 16 * 1024))
+    return BatchedServer(m, params, cluster, ServeConfig(max_len=96, block_tokens=8))
+
+
+def test_prefix_reuse_and_determinism(server):
+    p = list(range(40, 72))
+    r1 = server.handle(p, gen_tokens=4)
+    r2 = server.handle(p + [9, 9], gen_tokens=4)
+    r3 = server.handle(p, gen_tokens=4)
+    assert r1["reused_tokens"] == 0
+    assert r2["reused_tokens"] >= 32
+    assert r3["reused_tokens"] == 24  # last block always recomputed
+    assert r1["tokens"] == r3["tokens"], "cached-prefix decode must be deterministic"
+
+
+def test_divergent_prefixes_do_not_cross_match(server):
+    a = server.handle([1] * 32, gen_tokens=2)
+    b = server.handle([2] * 32, gen_tokens=2)
+    assert b["reused_tokens"] == 0
+
+
+def test_chain_fingerprints_capture_position():
+    cluster = DedupCluster.create(2, chunking=ChunkingSpec("fixed", 4096))
+    kv = KVBlockCache(cluster, block_tokens=4)
+    fps_a = kv.block_fps([1, 2, 3, 4, 5, 6, 7, 8])
+    fps_b = kv.block_fps([5, 6, 7, 8, 1, 2, 3, 4])
+    assert fps_a[0] != fps_b[1], "same tokens at different prefix => different identity"
+
+
+def test_eviction_respects_pins_and_reclaims_space(server):
+    kv = server.kv
+    before_unique = server.kv.cluster.unique_bytes_stored()
+    server.handle(list(range(100, 132)), gen_tokens=2)
+    assert server.kv.cluster.unique_bytes_stored() > 0
+    evicted = kv.evict(0)  # no pins held after handle() returns
+    assert evicted > 0
+    cl = kv.cluster
+    cl.tick(20); cl.run_gc(); cl.tick(20); cl.run_gc()
+    # evicted blocks' chunks reclaimed (other requests' blocks may remain)
+    assert cl.unique_bytes_stored() <= before_unique + 1
+
+
+def test_kv_identity_dedups_across_replicas():
+    """Two serving replicas writing the same prefix block store it once."""
+    import os
+
+    cluster = DedupCluster.create(4, chunking=ChunkingSpec("fixed", 4096))
+    kv1 = KVBlockCache(cluster, block_tokens=4)
+    kv2 = KVBlockCache(cluster, block_tokens=4)
+    payload = os.urandom(9000)
+    fps1 = kv1.block_fps([1, 2, 3, 4])
+    fps2 = kv2.block_fps([1, 2, 3, 4])
+    assert fps1 == fps2
+    kv1.put_blocks(fps1, [payload])
+    kv2.put_blocks(fps2, [payload])   # idempotent dedup
+    assert cluster.unique_bytes_stored() == 9000
+    n, _ = kv2.match_prefix([1, 2, 3, 4, 9, 9, 9, 9])
+    assert n == 4

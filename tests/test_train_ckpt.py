@@ -1,0 +1,155 @@
+"""Training loop + dedup checkpointing integration."""
+
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointConfig, DedupCheckpointer
+from repro.configs import get_config
+from repro.core import ChunkingSpec, DedupCluster, TransactionAbort, WriteError
+from repro.data import SyntheticLMData
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train import TrainConfig, train_loop
+from repro.train.loop import build_train_step, init_train_state
+
+CH = ChunkingSpec("fixed", 64 * 1024)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=1)
+    return cfg, model, data
+
+
+def test_loss_decreases(tiny_setup):
+    cfg, model, data = tiny_setup
+    tc = TrainConfig(steps=25, log_every=1,
+                     opt=AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=25))
+    state, hist = train_loop(model, data, tc)
+    first = np.mean([h["loss"] for h in hist[:4]])
+    last = np.mean([h["loss"] for h in hist[-4:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_grad_accum_matches_full_batch(tiny_setup):
+    cfg, model, data = tiny_setup
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state1 = init_train_state(model, jax.random.PRNGKey(0), opt)
+    state2 = jax.tree.map(lambda x: x, state1)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    s1, _ = jax.jit(build_train_step(model, opt, accum=1))(state1, batch)
+    s2, _ = jax.jit(build_train_step(model, opt, accum=2))(state2, batch)
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_gradient_compression_error_feedback():
+    opt = AdamWConfig(lr=1e-2, compress_grads=True, warmup_steps=1, total_steps=5)
+    params = {"w": jnp.ones((64, 64), jnp.float32)}
+    state = adamw_init(params, opt)
+    grads = {"w": jnp.full((64, 64), 1e-3, jnp.float32)}
+    p2, s2, m = adamw_update(params, grads, state, opt)
+    assert "err" in s2 and float(jnp.sum(jnp.abs(s2["err"]["w"]))) >= 0.0
+    assert not np.array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+    # error feedback: non-uniform grads leave quantization residuals that
+    # accumulate instead of vanishing (uniform tensors quantize losslessly)
+    tiny = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1e-6, (64, 64)), jnp.float32)}
+    _, s3, _ = adamw_update(p2, tiny, s2, opt)
+    assert np.abs(np.asarray(s3["err"]["w"])).max() > 0
+
+
+def test_checkpoint_roundtrip_bitexact(tiny_setup):
+    cfg, model, data = tiny_setup
+    opt = AdamWConfig()
+    state = init_train_state(model, jax.random.PRNGKey(3), opt)
+    ck = DedupCheckpointer(DedupCluster.create(4, replicas=2, chunking=CH))
+    ck.save("s1", state)
+    restored = ck.restore("s1", like=state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            a.view(np.uint8) if a.dtype.name == "bfloat16" else a,
+            b.view(np.uint8) if b.dtype.name == "bfloat16" else b,
+        )
+
+
+def test_checkpoint_dedup_across_saves(tiny_setup):
+    cfg, model, data = tiny_setup
+    params = model.init(jax.random.PRNGKey(0))
+    ck = DedupCheckpointer(DedupCluster.create(4, chunking=CH))
+    ck.save("a", params)
+    ck.save("b", params)  # identical -> ref-only writes, ~50% savings
+    assert ck.stats["leaves_ref_only"] > 0
+    assert ck.cluster.space_savings() > 0.45
+    pa = ck.restore("a", like=params)
+    pb = ck.restore("b", like=params)
+    for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(y).view(np.uint8))
+
+
+def test_checkpoint_delete_keeps_referenced_chunks(tiny_setup):
+    cfg, model, data = tiny_setup
+    params = model.init(jax.random.PRNGKey(0))
+    ck = DedupCheckpointer(DedupCluster.create(4, chunking=CH))
+    ck.save("a", params)
+    ck.save("b", params)
+    ck.delete("a")
+    restored = ck.restore("b", like=params)  # must survive a's deletion
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(y).view(np.uint8))
+
+
+def test_crash_mid_save_older_checkpoint_safe(tiny_setup):
+    cfg, model, data = tiny_setup
+    params = model.init(jax.random.PRNGKey(0))
+    cluster = DedupCluster.create(4, replicas=2, chunking=CH)
+    ck = DedupCheckpointer(cluster, CheckpointConfig(device_fp_fastpath=False))
+    ck.save("good", params)
+    calls = {"n": 0}
+
+    def inj(event, ctx):
+        if event == "before_chunk_op":
+            calls["n"] += 1
+            if calls["n"] == 29:
+                raise TransactionAbort("host died mid-checkpoint")
+
+    cluster.fault_injector = inj
+    mutated = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x, params)
+    try:
+        ck.save("crashy", mutated)
+    except WriteError:
+        pass
+    cluster.fault_injector = None
+    restored = ck.restore("good", like=params)
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(y).view(np.uint8))
+    # garbage from the failed save is collectable
+    cluster.tick(20); cluster.run_gc(); cluster.tick(20)
+    cluster.run_gc()
+    restored2 = ck.restore("good", like=params)  # still intact post-GC
+    assert restored2 is not None
+
+
+def test_restore_with_node_down_uses_replicas(tiny_setup):
+    cfg, model, data = tiny_setup
+    params = model.init(jax.random.PRNGKey(0))
+    cluster = DedupCluster.create(5, replicas=2, chunking=CH)
+    ck = DedupCheckpointer(cluster)
+    ck.save("s", params)
+    cluster.crash_node(list(cluster.nodes)[1])
+    restored = ck.restore("s", like=params)
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(y).view(np.uint8))
