@@ -81,45 +81,77 @@ class DedupCheckpointer:
     # ------------------------------------------------------------------ save
     def save(self, name: str, tree: Any) -> dict[str, Any]:
         leaves = _leaf_paths(tree)
+        # Batched device fingerprinting: one kernel launch for ALL array
+        # leaves (vs one per leaf), then per-leaf ref-write decisions.
+        fp_cache = self._batch_device_fps(leaves)
         manifest = {"name": name, "leaves": []}
+        full_writes: list[tuple[str, bytes]] = []
         for key, leaf in leaves:
             obj_name = f"{self.cfg.prefix}/{name}/{key}"
-            if self._ref_write(key, leaf, obj_name):
+            if self._ref_write(key, leaf, obj_name, fp_cache.get(key)):
                 manifest["leaves"].append({"key": key, "object": obj_name, "ref": True})
                 self.stats["leaves_ref_only"] += 1
                 continue
             data = _serialize_leaf(leaf)
-            self.cluster.write_object(obj_name, data)
-            self.stats["leaves_written"] += 1
-            self.stats["bytes_sent"] += len(data)
+            full_writes.append((obj_name, data))
             manifest["leaves"].append({"key": key, "object": obj_name, "ref": False})
         mbytes = json.dumps(manifest).encode()
-        self.cluster.write_object(f"{self.cfg.prefix}/{name}/MANIFEST", mbytes)
+        # One batched write transaction for all full leaves + the manifest.
+        # write_objects commits items in order and raises at the first
+        # failure, so the writes_ok delta counts exactly the committed
+        # leaves — including on a mid-batch failure.
+        ok_before = self.cluster.stats.writes_ok
+        try:
+            self.cluster.write_objects(
+                full_writes + [(f"{self.cfg.prefix}/{name}/MANIFEST", mbytes)]
+            )
+        finally:
+            committed = min(self.cluster.stats.writes_ok - ok_before, len(full_writes))
+            self.stats["leaves_written"] += committed
+            self.stats["bytes_sent"] += sum(len(d) for _, d in full_writes[:committed])
         # drain async flag flips (the paper's consistency manager)
         self.cluster.tick(2)
         return manifest
 
-    def _ref_write(self, key: str, leaf, obj_name: str) -> bool:
+    def _batch_device_fps(self, leaves: list[tuple[str, Any]]) -> dict[str, bytes]:
+        """Fingerprint every array leaf in one batched kernel call. Returns
+        leafpath -> raw fingerprint bytes; empty on any failure (callers fall
+        back to the per-leaf path)."""
+        if not self.cfg.device_fp_fastpath:
+            return {}
+        arr = [(k, leaf) for k, leaf in leaves if hasattr(leaf, "dtype")]
+        if not arr:
+            return {}
+        try:
+            fps = kops.fingerprint_tensor_chunks_many(
+                [leaf for _, leaf in arr], self.cfg.fp_chunk_bytes
+            )
+            return {
+                k: np.asarray(jax.device_get(f)).tobytes()
+                for (k, _), f in zip(arr, fps)
+            }
+        except Exception:
+            return {}
+
+    def _ref_write(self, key: str, leaf, obj_name: str, fp_bytes: bytes | None = None) -> bool:
         """Device-fp fast path: if the tensor is unchanged since the last
         save (per the Pallas fingerprint kernel), create the new object as a
         reference-only write against the previous one — refcount unicasts,
         zero data motion. Returns True on success."""
         if not self.cfg.device_fp_fastpath or not hasattr(leaf, "dtype"):
             return False
-        try:
-            fps = kops.fingerprint_tensor_chunks(leaf, self.cfg.fp_chunk_bytes)
-            fp_bytes = np.asarray(jax.device_get(fps)).tobytes()
-        except Exception:
-            return False
+        if fp_bytes is None:
+            try:
+                fps = kops.fingerprint_tensor_chunks(leaf, self.cfg.fp_chunk_bytes)
+                fp_bytes = np.asarray(jax.device_get(fps)).tobytes()
+            except Exception:
+                return False
         prev = self._last_device_fps.get(key)
         self._last_device_fps[key] = (fp_bytes, obj_name)
         if prev is None or prev[0] != fp_bytes:
             return False
         ofp = self.cluster.write_object_by_ref(obj_name, prev[1])
-        if ofp is None:
-            self._last_device_fps[key] = (fp_bytes, obj_name)
-            return False
-        return True
+        return ofp is not None
 
     # --------------------------------------------------------------- restore
     def restore(self, name: str, like: Any | None = None) -> Any:

@@ -2,12 +2,12 @@
 
 Public API:
     DedupCluster.create(n_nodes, replicas=..., chunking=...)
-    cluster.write_object / read_object / delete_object
+    cluster.write_object / write_objects / read_object / delete_object
     cluster.add_node / remove_node / scrub / run_gc / tick
-    ClusterMap, ChunkingSpec, Fingerprint
+    ClusterMap, ChunkingSpec, Fingerprint, fingerprint_many
 """
 
-from repro.core.chunking import ChunkingSpec, chunk_object
+from repro.core.chunking import ChunkingSpec, chunk_object, window_hashes
 from repro.core.cluster import (
     DedupCluster,
     ReadError,
@@ -20,12 +20,21 @@ from repro.core.baselines import (
     NoDedupCluster,
 )
 from repro.core.dmshard import CITEntry, DMShard, INVALID, OMAPEntry, VALID
-from repro.core.fingerprint import Fingerprint, chain_fp, name_fp, object_fp, sha256_fp
+from repro.core.fingerprint import (
+    Fingerprint,
+    chain_fp,
+    fingerprint_many,
+    name_fp,
+    object_fp,
+    sha256_fp,
+)
 from repro.core.placement import ClusterMap, place, primary
 
 __all__ = [
     "ChunkingSpec",
     "chunk_object",
+    "window_hashes",
+    "fingerprint_many",
     "DedupCluster",
     "CentralDedupCluster",
     "DiskLocalDedupCluster",

@@ -24,7 +24,12 @@ from typing import Callable
 
 from repro.core.chunking import ChunkingSpec, chunk_object
 from repro.core.dmshard import OMAPEntry
-from repro.core.fingerprint import Fingerprint, name_fp, object_fp, sha256_fp
+from repro.core.fingerprint import (
+    Fingerprint,
+    fingerprint_many,
+    name_fp,
+    object_fp,
+)
 from repro.core.node import ChunkMissing, NodeDown, StorageNode
 from repro.core.placement import ClusterMap, place
 
@@ -70,6 +75,10 @@ class DedupCluster:
     now: int = 0
     fault_injector: FaultInjector | None = None
     send_fingerprint_first: bool = False   # beyond-paper: lookup-before-send
+    # Per-node message batching: None = auto (batched unless a fault injector
+    # is listening, since the batched unicast has no between-chunk event
+    # windows); True/False force it regardless of observers.
+    batch_unicasts: bool | None = None
     _txn_counter: int = 0
 
     # ------------------------------------------------------------- lifecycle
@@ -124,7 +133,44 @@ class DedupCluster:
 
     # ----------------------------------------------------------------- write
     def write_object(self, name: str, data: bytes) -> Fingerprint:
-        """Complete write transaction. Returns the object fingerprint."""
+        """Complete write transaction. Returns the object fingerprint.
+        Thin wrapper over the batched pipeline (a batch of one)."""
+        return self.write_objects([(name, data)])[0]
+
+    def write_objects(self, items: list[tuple[str, bytes]]) -> list[Fingerprint]:
+        """Batched write pipeline. Semantically identical to looping
+        ``write_object`` over ``items`` (same fingerprints, refcounts, OMAP
+        state, rollback behavior and fault event points; on failure the
+        exception propagates after earlier items committed, exactly like the
+        loop) — but vectorized where the loop is serial:
+
+        1. chunking (vectorized CDC) + fingerprinting run over the whole
+           batch in one pass (``fingerprint_many``);
+        2. each object's chunk ops are grouped per target node into one
+           batched unicast (``StorageNode.receive_chunks``), so control
+           messages scale with nodes touched, not chunks written.
+
+        Each object remains its own transaction. ``lookup_unicasts`` counts
+        fingerprint lookups carried (batch-invariant); ``control_msgs``
+        counts messages, which batching reduces.
+        """
+        prepped: list[tuple[str, bytes, list[bytes]]] = []
+        for name, data in items:
+            prepped.append((name, data, chunk_object(data, self.chunking)))
+        all_fps = fingerprint_many([c for _, _, chunks in prepped for c in chunks])
+        out: list[Fingerprint] = []
+        off = 0
+        for name, data, chunks in prepped:
+            fps = all_fps[off : off + len(chunks)]
+            off += len(chunks)
+            out.append(self._write_prepared(name, data, chunks, fps))
+        return out
+
+    def _write_prepared(
+        self, name: str, data: bytes, chunks: list[bytes], fps: list[Fingerprint]
+    ) -> Fingerprint:
+        """One object's write transaction over pre-chunked, pre-fingerprinted
+        content (paper Fig 3, steps after the primary's chunk+fingerprint)."""
         self._txn_counter += 1
         txn = self._txn_counter
         self.stats.logical_bytes_written += len(data)
@@ -138,10 +184,6 @@ class DedupCluster:
         self.stats.net_bytes += len(data)
         self._fault("primary_selected", name=name, primary=primary, txn=txn)
 
-        # 2. primary chunks + fingerprints the object.
-        chunks = chunk_object(data, self.chunking)
-        fps = [sha256_fp(c) for c in chunks]
-
         # Idempotence: rewriting an identical object is a no-op; rewriting
         # different content under an existing name replaces it (old refs
         # released first so refcounts stay exact).
@@ -152,19 +194,32 @@ class DedupCluster:
                 return prev.object_fp
             self.delete_object(name)
 
-        # 3. per-chunk fingerprint-routed unicasts (parallel in real life;
-        #    deterministic order here).
+        # 2. fingerprint-routed chunk unicasts, batched per target node.
+        batched = (
+            self.batch_unicasts
+            if self.batch_unicasts is not None
+            else self.fault_injector is None
+        )
         acked: list[tuple[Fingerprint, list[str]]] = []
         try:
-            for i, (fp, chunk) in enumerate(zip(fps, chunks)):
-                self._fault("before_chunk_op", name=name, index=i, fp=fp, txn=txn)
-                written_on = self._write_chunk(primary, fp, chunk, txn)
-                if not written_on:
-                    raise WriteError(f"chunk {i} of {name!r}: no live target")
-                acked.append((fp, written_on))
-                self._fault("after_chunk_op", name=name, index=i, fp=fp, txn=txn)
+            if batched:
+                acked, fail_idx = self._route_chunks_batched(primary, fps, chunks, txn)
+                if fail_idx is not None:
+                    raise WriteError(f"chunk {fail_idx} of {name!r}: no live target")
+            else:
+                # Chunk-granular path: a batched unicast has no window between
+                # two chunk ops, so when a fault injector is listening we keep
+                # per-chunk messaging to preserve every observable event point
+                # (before/after_chunk_op at each index).
+                for i, (fp, chunk) in enumerate(zip(fps, chunks)):
+                    self._fault("before_chunk_op", name=name, index=i, fp=fp, txn=txn)
+                    written_on = self._write_chunk(primary, fp, chunk, txn)
+                    if not written_on:
+                        raise WriteError(f"chunk {i} of {name!r}: no live target")
+                    acked.append((fp, written_on))
+                    self._fault("after_chunk_op", name=name, index=i, fp=fp, txn=txn)
 
-            # 4. all chunks acked -> OMAP entry on primary (+ replicas).
+            # 3. all chunks acked -> OMAP entry on primary (+ replicas).
             self._fault("before_omap", name=name, txn=txn)
             if not self.nodes[primary].alive:
                 raise NodeDown(primary)
@@ -180,19 +235,65 @@ class DedupCluster:
                 raise WriteError(f"no live OMAP target for {name!r} at commit")
         except (NodeDown, TransactionAbort, WriteError) as e:
             # Failed object transaction: best-effort rollback of refcounts we
-            # took. Unreachable decrements leave flag-0 garbage for GC — the
-            # paper's failure model.
+            # took (batched per node). Unreachable decrements leave flag-0
+            # garbage for GC — the paper's failure model.
+            undo: dict[str, list[Fingerprint]] = {}
             for fp, on in acked:
                 for t in on:
-                    node = self.nodes[t]
-                    if node.alive:
-                        node.decref_chunk(fp, self.now)
-                        self.stats.control_msgs += 1
+                    undo.setdefault(t, []).append(fp)
+            for t, undo_fps in undo.items():
+                node = self.nodes[t]
+                if node.alive:
+                    node.decref_chunks(undo_fps, self.now)
+                    # one message per node when batching; per-op otherwise
+                    self.stats.control_msgs += 1 if batched else len(undo_fps)
             self.stats.writes_failed += 1
             raise WriteError(f"write {name!r} failed: {e}") from e
 
         self.stats.writes_ok += 1
         return ofp
+
+    def _route_chunks_batched(
+        self, primary: str, fps: list[Fingerprint], chunks: list[bytes], txn: int
+    ) -> tuple[list[tuple[Fingerprint, list[str]]], int | None]:
+        """Group one object's chunk ops per target node -> one batched unicast
+        each. Returns (acked, fail_idx); fail_idx is the first chunk with no
+        live target, and — matching the serial abort point — no op at or past
+        it is applied."""
+        targets_per_chunk: list[list[str]] = []
+        fail_idx: int | None = None
+        for i, fp in enumerate(fps):
+            live = [t for t in self.chunk_targets(fp) if self.nodes[t].alive]
+            if not live:
+                fail_idx = i
+                break
+            targets_per_chunk.append(live)
+
+        per_node: dict[str, list[int]] = {}
+        for i, live in enumerate(targets_per_chunk):
+            for t in live:
+                per_node.setdefault(t, []).append(i)
+
+        for t, idxs in per_node.items():
+            node = self.nodes[t]
+            ops = [(fps[i], chunks[i]) for i in idxs]
+            # One message carries |ops| fingerprint lookups + chunk writes.
+            self.stats.lookup_unicasts += len(ops)
+            self.stats.control_msgs += 1
+            outcomes = node.receive_chunks(ops, self.now, txn)
+            if t != primary:
+                if self.send_fingerprint_first:
+                    # beyond-paper: 64B fp probe first; bytes travel on miss
+                    # only. A probe hit is exactly a dedup_hit outcome.
+                    self.stats.net_bytes += sum(
+                        len(c) for (_, c), o in zip(ops, outcomes) if o != "dedup_hit"
+                    )
+                else:
+                    # paper-faithful: chunk bytes always travel to the target.
+                    self.stats.net_bytes += sum(len(c) for _, c in ops)
+
+        acked = list(zip(fps, targets_per_chunk))
+        return acked, fail_idx
 
     def _write_chunk(self, primary: str, fp: Fingerprint, chunk: bytes, txn: int) -> list[str]:
         """Route one chunk to its replica set. Returns nodes that took a ref."""

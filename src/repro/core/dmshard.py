@@ -80,6 +80,20 @@ class DMShard:
     def cit_remove(self, fp: Fingerprint) -> None:
         del self.cit[fp]
 
+    # --- batched CIT ops (one unicast carries many chunk ops) ---------------
+    def cit_lookup_many(self, fps: list[Fingerprint]) -> list[CITEntry | None]:
+        """Batched lookup — the payload of one batched unicast message."""
+        cit = self.cit
+        return [cit.get(fp) for fp in fps]
+
+    def cit_insert_many(
+        self, items: list[tuple[Fingerprint, int]], now: int
+    ) -> list[CITEntry]:
+        return [self.cit_insert(fp, size, now) for fp, size in items]
+
+    def cit_addref_many(self, fps: list[Fingerprint], delta: int = 1) -> list[int]:
+        return [self.cit_addref(fp, delta) for fp in fps]
+
     # --- OMAP ops (object-name-routed I/O) ----------------------------------
     def omap_put(self, entry: OMAPEntry) -> None:
         self.omap[entry.name] = entry

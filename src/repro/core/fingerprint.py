@@ -53,6 +53,17 @@ def sha256_fp(data: bytes) -> Fingerprint:
     return Fingerprint("sha256", hashlib.sha256(data).digest()[:FP_BYTES])
 
 
+def fingerprint_many(chunks: Iterable[bytes]) -> list[Fingerprint]:
+    """Batch fingerprinting: hash every chunk (of one object or of a whole
+    write batch) in one pass. Results are exactly ``[sha256_fp(c) for c in
+    chunks]``; batching keeps the hot write path to a single call site and
+    lets the device path (``repro.kernels.ops.fingerprint_tensor_chunks_many``)
+    swap in without touching callers."""
+    sha = hashlib.sha256
+    nb = FP_BYTES
+    return [Fingerprint("sha256", sha(c).digest()[:nb]) for c in chunks]
+
+
 def name_fp(name: str) -> Fingerprint:
     """Object-name fingerprint — locates the primary OSS for an object
     (the paper's 'client performs object name hashing')."""

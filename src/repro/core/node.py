@@ -56,8 +56,30 @@ class StorageNode:
         """Fingerprint-routed chunk write (paper fig 2, OSS 4). Returns one of
         'dedup_hit' | 'repaired' | 'restored' | 'stored'."""
         self._require_alive()
+        return self._apply_receive(fp, data, self.shard.cit_lookup(fp), now, txn_id)
+
+    def receive_chunks(
+        self, ops: list[tuple[Fingerprint, bytes]], now: int, txn_id: int
+    ) -> list[str]:
+        """Batched fingerprint-routed write: one unicast carrying many chunk
+        ops. The CIT lookups are batched; per-op state transitions are exactly
+        those of ``receive_chunk`` applied in order (a duplicate fingerprint
+        later in the batch sees the entry its earlier twin created)."""
+        self._require_alive()
+        entries = self.shard.cit_lookup_many([fp for fp, _ in ops])
+        out: list[str] = []
+        seen: set[Fingerprint] = set()
+        for (fp, data), entry in zip(ops, entries):
+            if fp in seen:
+                entry = self.shard.cit_lookup(fp)
+            seen.add(fp)
+            out.append(self._apply_receive(fp, data, entry, now, txn_id))
+        return out
+
+    def _apply_receive(
+        self, fp: Fingerprint, data: bytes, entry: CITEntry | None, now: int, txn_id: int
+    ) -> str:
         self.stats.cit_lookups += 1
-        entry = self.shard.cit_lookup(fp)
 
         if entry is not None and entry.is_valid():
             # Duplicate write, valid flag: refcount increment granted.
@@ -111,6 +133,11 @@ class StorageNode:
             # Tombstone through the same tagged machinery: flag invalid,
             # GC ages it out; a re-reference before GC repairs it back.
             self.shard.cit_set_flag(fp, INVALID, now)
+
+    def decref_chunks(self, fps: list[Fingerprint], now: int) -> None:
+        """Batched refcount release (rollback / delete): one unicast."""
+        for fp in fps:
+            self.decref_chunk(fp, now)
 
     def has_chunk(self, fp: Fingerprint) -> bool:
         return fp in self.chunk_store

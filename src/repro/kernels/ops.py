@@ -74,6 +74,45 @@ def fingerprint_tensor_chunks(
     return _fingerprint_tensor_impl(flat, chunk_words=chunk_words, use_pallas=use_pallas)
 
 
+def fingerprint_tensor_chunks_many(
+    tensors: list[jnp.ndarray],
+    chunk_bytes: int = 512 * 1024,
+    *,
+    use_pallas: bool | None = None,
+) -> list[jnp.ndarray]:
+    """Batched ``fingerprint_tensor_chunks``: fingerprint every tensor's
+    chunks in ONE kernel launch instead of one launch per tensor.
+
+    Each tensor is padded to a chunk_words multiple independently (so results
+    are bit-identical to per-tensor calls), the chunk rows are stacked into a
+    single (total_chunks, chunk_words) matrix, and the kernel runs once.
+    Returns one (n_chunks_i, 4) uint32 array per input tensor."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not tensors:
+        return []
+    chunk_words = max(128, chunk_bytes // 4)
+    rows: list[jnp.ndarray] = []
+    counts: list[int] = []
+    for x in tensors:
+        flat = tensor_to_u32(x)
+        pad = (-flat.shape[0]) % chunk_words
+        w = jnp.pad(flat, (0, pad)).reshape(-1, chunk_words)
+        rows.append(w)
+        counts.append(w.shape[0])
+    stacked = jnp.concatenate(rows, axis=0)
+    if use_pallas:
+        fps = fingerprint_chunks_pallas(stacked)
+    else:
+        fps = ref.fingerprint_chunks(stacked)
+    out: list[jnp.ndarray] = []
+    off = 0
+    for c in counts:
+        out.append(fps[off : off + c])
+        off += c
+    return out
+
+
 def device_fps_to_host(fps_u32: jnp.ndarray) -> list[Fingerprint]:
     """Convert kernel output rows into namespaced Fingerprint objects."""
     rows = np.asarray(jax.device_get(fps_u32))
@@ -121,15 +160,23 @@ def flash_attention(
     return out.reshape(b, sq, h, hd)
 
 
-def cdc_boundaries(
-    data_u8: jnp.ndarray, mask: int, *, use_pallas: bool | None = None
+def cdc_window_hashes(
+    data_u8: jnp.ndarray, *, use_pallas: bool | None = None
 ) -> jnp.ndarray:
-    """(n,) uint8 byte stream -> (n,) bool boundary mask."""
+    """(n,) uint8 byte stream -> (n,) uint32 window hashes, bit-identical to
+    the host ``repro.core.chunking.window_hashes`` (and its scalar oracle).
+    Device route for the vectorized chunker: Pallas on TPU, jnp elsewhere."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     tvals = jnp.take(_gear_jnp(), data_u8.astype(jnp.int32))
     if use_pallas:
-        h = cdc_hashes_pallas(tvals)
-    else:
-        h = ref.cdc_hashes(tvals)
+        return cdc_hashes_pallas(tvals)
+    return ref.cdc_hashes(tvals)
+
+
+def cdc_boundaries(
+    data_u8: jnp.ndarray, mask: int, *, use_pallas: bool | None = None
+) -> jnp.ndarray:
+    """(n,) uint8 byte stream -> (n,) bool boundary mask."""
+    h = cdc_window_hashes(data_u8, use_pallas=use_pallas)
     return (h & jnp.uint32(mask)) == 0

@@ -1,0 +1,219 @@
+"""Batched write pipeline (`write_objects`) vs looped `write_object`:
+identical fingerprints, refcounts, OMAP state, stored bytes and dedup
+ratios — including under fault injection at the existing event points."""
+
+import numpy as np
+import pytest
+
+from repro.core import ChunkingSpec, DedupCluster, TransactionAbort, WriteError
+
+RNG = np.random.default_rng(99)
+
+
+def _items(n=12, max_size=20000):
+    items = [(f"o{i}", RNG.bytes(int(RNG.integers(0, max_size)))) for i in range(n)]
+    # guaranteed duplicates: full and partial
+    items.append(("dup-full", items[0][1]))
+    items.append(("dup-cat", items[1][1] + items[2][1]))
+    return items
+
+
+def _assert_same_state(a: DedupCluster, b: DedupCluster):
+    assert a.nodes.keys() == b.nodes.keys()
+    for nid in a.nodes:
+        na, nb = a.nodes[nid], b.nodes[nid]
+        assert na.chunk_store == nb.chunk_store, nid
+        cit_a = {fp: (e.refcount, e.flag, e.size) for fp, e in na.shard.cit.items()}
+        cit_b = {fp: (e.refcount, e.flag, e.size) for fp, e in nb.shard.cit.items()}
+        assert cit_a == cit_b, nid
+        omap_a = {n: (e.object_fp, tuple(e.chunk_fps), e.size) for n, e in na.shard.omap.items()}
+        omap_b = {n: (e.object_fp, tuple(e.chunk_fps), e.size) for n, e in nb.shard.omap.items()}
+        assert omap_a == omap_b, nid
+    assert a.unique_bytes_stored() == b.unique_bytes_stored()
+    assert a.dedup_ratio() == b.dedup_ratio()
+    assert a.stats.net_bytes == b.stats.net_bytes
+    assert a.stats.logical_bytes_written == b.stats.logical_bytes_written
+    assert a.stats.writes_ok == b.stats.writes_ok
+    assert a.stats.writes_failed == b.stats.writes_failed
+    # lookup *operations* are batch-invariant; only message counts may shrink
+    assert a.stats.lookup_unicasts == b.stats.lookup_unicasts
+    assert a.stats.control_msgs >= b.stats.control_msgs
+
+
+@pytest.mark.parametrize("spec", [ChunkingSpec("fixed", 1024), ChunkingSpec("cdc", 2048)],
+                         ids=["fixed", "cdc"])
+@pytest.mark.parametrize("replicas", [1, 2])
+def test_batch_equals_serial(spec, replicas):
+    items = _items()
+    a = DedupCluster.create(4, replicas=replicas, chunking=spec)
+    b = DedupCluster.create(4, replicas=replicas, chunking=spec)
+    fa = [a.write_object(n, d) for n, d in items]
+    fb = b.write_objects(list(items))
+    assert fa == fb
+    _assert_same_state(a, b)
+    for n, d in items:
+        assert b.read_object(n) == d
+
+
+def test_batch_rewrite_and_idempotence_equal_serial():
+    spec = ChunkingSpec("fixed", 512)
+    items = _items(6, 4000)
+    # rewrite same names with same + different content within one batch
+    items += [items[0], ("o1", RNG.bytes(3000))]
+    a = DedupCluster.create(3, chunking=spec)
+    b = DedupCluster.create(3, chunking=spec)
+    fa = [a.write_object(n, d) for n, d in items]
+    fb = b.write_objects(list(items))
+    assert fa == fb
+    _assert_same_state(a, b)
+
+
+def test_write_object_is_thin_wrapper():
+    c = DedupCluster.create(3, chunking=ChunkingSpec("fixed", 1024))
+    data = RNG.bytes(5000)
+    assert c.write_object("x", data) == c.write_objects([("y", data)])[0]
+    assert c.read_object("x") == c.read_object("y") == data
+
+
+def _abort_injector(event_name, target_name, index=None):
+    def inj(event, ctx):
+        if event == event_name and ctx.get("name") == target_name:
+            if index is None or ctx.get("index") == index:
+                raise TransactionAbort(f"injected at {event_name}")
+    return inj
+
+
+@pytest.mark.parametrize("event,index", [
+    ("before_chunk_op", 3),
+    ("after_chunk_op", 0),
+    ("before_omap", None),
+])
+def test_batch_equals_serial_under_fault_injection(event, index):
+    spec = ChunkingSpec("fixed", 1024)
+    items = _items(6, 8000)
+    victim = items[3][0]
+    a = DedupCluster.create(4, chunking=spec)
+    b = DedupCluster.create(4, chunking=spec)
+    a.fault_injector = _abort_injector(event, victim, index)
+    b.fault_injector = _abort_injector(event, victim, index)
+    if len(items[3][1]) <= (index or 0) * 1024:
+        items[3] = (victim, RNG.bytes(8192))  # ensure the indexed event fires
+    fa = []
+    for n, d in items:
+        try:
+            fa.append(a.write_object(n, d))
+        except WriteError:
+            fa.append(None)
+    try:
+        fb = b.write_objects(list(items))
+        assert None not in fa and fb == fa  # injector never fired in either
+    except WriteError:
+        # batch raises at the failed item, exactly where the loop failed;
+        # retrying the tail must reproduce the serial fingerprints
+        done = b.stats.writes_ok + b.stats.writes_failed
+        assert fa[done - 1] is None, "serial and batched must fail at the same item"
+        fb_tail = [b.write_objects([(n, d)])[0] for n, d in items[done:]]
+        assert fb_tail == fa[done:]
+    # committed object fingerprints visible in OMAP match the serial returns
+    omap_fps = {}
+    for node in b.nodes.values():
+        omap_fps.update({nm: e.object_fp for nm, e in node.shard.omap.items()})
+    for (nm, _), f in zip(items, fa):
+        if f is None:
+            assert nm not in omap_fps
+        else:
+            assert omap_fps[nm] == f
+    _assert_same_state(a, b)
+    garbage_a = sum(len(n.shard.invalid_fps()) for n in a.nodes.values())
+    garbage_b = sum(len(n.shard.invalid_fps()) for n in b.nodes.values())
+    assert garbage_a == garbage_b
+
+
+def test_batch_with_dead_node_equals_serial():
+    spec = ChunkingSpec("fixed", 1024)
+    items = _items(8, 10000)
+    a = DedupCluster.create(5, replicas=2, chunking=spec)
+    b = DedupCluster.create(5, replicas=2, chunking=spec)
+    a.crash_node("oss2")
+    b.crash_node("oss2")
+    fa = [a.write_object(n, d) for n, d in items]
+    fb = b.write_objects(list(items))
+    assert fa == fb
+    _assert_same_state(a, b)
+    for n, d in items:
+        assert b.read_object(n) == d
+
+
+def test_batch_write_then_gc_lifecycle():
+    """Batched writes feed the same tagged-consistency machinery: flags flip
+    on tick, deletes tombstone, GC collects."""
+    c = DedupCluster.create(3, chunking=ChunkingSpec("fixed", 1024))
+    items = [(f"o{i}", RNG.bytes(4096)) for i in range(4)]
+    c.write_objects(items)
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) > 0
+    c.tick(2)
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 0
+    for n, _ in items:
+        assert c.delete_object(n)
+    c.tick(20); c.run_gc(); c.tick(20); c.run_gc()
+    assert c.unique_bytes_stored() == 0
+
+
+def test_empty_batch_and_empty_object():
+    c = DedupCluster.create(3, chunking=ChunkingSpec("fixed", 1024))
+    assert c.write_objects([]) == []
+    fps = c.write_objects([("empty", b"")])
+    assert c.read_object("empty") == b""
+    assert len(fps) == 1
+
+
+def test_dmshard_batch_cit_apis():
+    """The batched CIT surface must mirror the scalar ops exactly."""
+    from repro.core.dmshard import DMShard
+    from repro.core.fingerprint import sha256_fp
+
+    sh = DMShard()
+    fps = [sha256_fp(bytes([i]) * 10) for i in range(4)]
+    entries = sh.cit_insert_many([(fp, 10) for fp in fps], now=0)
+    assert [e.refcount for e in entries] == [0] * 4
+    assert sh.cit_lookup_many(fps) == entries
+    assert sh.cit_lookup_many([sha256_fp(b"missing")]) == [None]
+    assert sh.cit_addref_many(fps) == [1] * 4
+    assert sh.cit_addref_many(fps, -1) == [0] * 4
+    with pytest.raises(KeyError):
+        sh.cit_insert_many([(fps[0], 10)], now=0)
+
+
+def test_batch_unicasts_knob_forces_granular_messaging():
+    """batch_unicasts=False reproduces the chunk-granular message shape
+    (one unicast per chunk-replica op) with identical cluster state."""
+    data = RNG.bytes(64 * 1024)
+    granular = DedupCluster.create(8, chunking=ChunkingSpec("fixed", 1024),
+                                   batch_unicasts=False)
+    batched = DedupCluster.create(8, chunking=ChunkingSpec("fixed", 1024))
+    granular.write_object("a", data)
+    batched.write_object("a", data)
+    assert granular.stats.lookup_unicasts == batched.stats.lookup_unicasts == 64
+    assert granular.stats.control_msgs > batched.stats.control_msgs
+    for nid in granular.nodes:
+        assert granular.nodes[nid].chunk_store == batched.nodes[nid].chunk_store
+
+
+def test_batched_node_api_within_batch_duplicates():
+    """Duplicate fingerprints inside one batched unicast must behave exactly
+    like sequential receive_chunk calls: the first stores, the second sees
+    the still-INVALID entry with bytes present -> consistency-check repair
+    (the flag flip is async, paper §2.4)."""
+    from repro.core.fingerprint import sha256_fp
+    from repro.core.node import StorageNode
+
+    blob = b"x" * 100
+    fp = sha256_fp(blob)
+    batched = StorageNode("n0")
+    serial = StorageNode("n1")
+    outcomes = batched.receive_chunks([(fp, blob), (fp, blob)], now=0, txn_id=1)
+    ref = [serial.receive_chunk(fp, blob, 0, 1), serial.receive_chunk(fp, blob, 0, 1)]
+    assert outcomes == ref == ["stored", "repaired"]
+    assert batched.shard.cit_lookup(fp).refcount == 2
+    assert serial.shard.cit_lookup(fp).refcount == 2
+    assert batched.shard.cit_lookup(fp).flag == serial.shard.cit_lookup(fp).flag

@@ -1,0 +1,119 @@
+"""Vectorized CDC vs the scalar reference oracle, the jnp/Pallas kernel
+oracle, and the spec invariants (min/max size, losslessness)."""
+
+import numpy as np
+import pytest
+
+from repro.core.chunking import (
+    ChunkingSpec,
+    cdc_mask,
+    chunk_cdc,
+    chunk_cdc_scalar,
+    chunk_object,
+    window_hash_at,
+    window_hashes,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+# --------------------------------------------------------- window hashes ----
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 1000, 65536, 65537, 70000])
+def test_window_hashes_match_scalar_oracle(n):
+    data = RNG.bytes(n)
+    h = window_hashes(data)
+    idx = set(range(0, min(n, 64))) | {n - 1, n // 2, n // 3}
+    for i in idx:
+        assert int(h[i]) == window_hash_at(data, i), i
+
+
+def test_window_hashes_empty():
+    assert window_hashes(b"").shape == (0,)
+
+
+def test_window_hashes_full_sweep_small():
+    data = RNG.bytes(300)
+    h = window_hashes(data)
+    assert [int(x) for x in h] == [window_hash_at(data, i) for i in range(300)]
+
+
+def test_window_hashes_kernel_backend_agrees():
+    pytest.importorskip("jax")
+    data = RNG.bytes(5000)
+    np.testing.assert_array_equal(
+        window_hashes(data), window_hashes(data, backend="kernel")
+    )
+
+
+def test_window_hashes_pallas_interpret_agrees():
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.chunking import _GEAR_NP
+    from repro.kernels.cdc import cdc_hashes_pallas
+
+    data = RNG.bytes(4096)
+    buf = np.frombuffer(data, dtype=np.uint8)
+    tvals = jnp.asarray(_GEAR_NP[buf])
+    np.testing.assert_array_equal(
+        np.asarray(cdc_hashes_pallas(tvals, interpret=True)), window_hashes(data)
+    )
+
+
+# ------------------------------------------------------------- boundaries ----
+SPECS = [
+    ChunkingSpec("cdc", 256),
+    ChunkingSpec("cdc", 1024),
+    ChunkingSpec("cdc", 2048),
+    ChunkingSpec("cdc", 256, min_size=10, max_size=64),
+    ChunkingSpec("cdc", 256, min_size=100, max_size=50),   # degenerate: max <= min
+    ChunkingSpec("cdc", 512, min_size=1, max_size=8192),
+]
+SIZES = [0, 1, 17, 255, 256, 1000, 8192, 40000, 65535, 65536, 65537]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: f"cs{s.chunk_size}-{s.min_size}-{s.max_size}")
+def test_vectorized_boundaries_equal_scalar(spec):
+    for n in SIZES:
+        data = RNG.bytes(n)
+        assert list(chunk_cdc(data, spec)) == list(chunk_cdc_scalar(data, spec)), n
+
+
+def test_min_max_size_enforced_and_lossless():
+    spec = ChunkingSpec("cdc", 256).normalized()
+    for n in [1, 100, 5000, 50000]:
+        data = RNG.bytes(n)
+        chunks = chunk_object(data, spec)
+        assert b"".join(chunks) == data
+        assert all(len(c) <= spec.max_size for c in chunks)
+        # every chunk except the tail respects min_size
+        assert all(len(c) >= spec.min_size + 1 or c is chunks[-1] for c in chunks)
+
+
+def test_repeated_content_shares_boundaries():
+    """Identical tails re-synchronize: the vectorized chunker must keep the
+    CDC shift-resilience property the checkpoint tests rely on."""
+    base = RNG.bytes(30000)
+    spec = ChunkingSpec("cdc", 512)
+    a = set(chunk_object(base, spec))
+    b = set(chunk_object(RNG.bytes(137) + base, spec))
+    assert len(a & b) >= len(a) // 2
+
+
+def test_kernel_backend_chunking_identical():
+    pytest.importorskip("jax")
+    data = RNG.bytes(20000)
+    spec = ChunkingSpec("cdc", 512)
+    assert list(chunk_cdc(data, spec)) == list(chunk_cdc(data, spec, backend="kernel"))
+
+
+def test_cdc_mask_targets_chunk_size():
+    assert cdc_mask(512 * 1024) == (1 << 19) - 1
+    assert cdc_mask(256) == (1 << 8) - 1
+
+
+@pytest.mark.slow
+def test_vectorized_boundaries_equal_scalar_big():
+    data = RNG.bytes(1 << 20)
+    spec = ChunkingSpec("cdc", 4096)
+    assert list(chunk_cdc(data, spec)) == list(chunk_cdc_scalar(data, spec))

@@ -3,6 +3,8 @@
 import hashlib
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chunking import ChunkingSpec, chunk_object, window_hash_at

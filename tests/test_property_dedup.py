@@ -11,6 +11,9 @@ crashes / restarts / ticks / GC / topology changes:
   I5. every CIT entry / chunk sits on its placement nodes (after rebalance)
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 from hypothesis.stateful import RuleBasedStateMachine, initialize, invariant, rule
