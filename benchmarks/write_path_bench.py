@@ -84,23 +84,54 @@ def bench_write_path(n_objects: int, obj_bytes: int) -> dict:
         return c
 
     def batched():
+        # per-object node batching (the PR 1 message shape)
+        c = DedupCluster.create(8, chunking=spec, coalesce_batches=False)
+        c.write_objects(list(items))
+        return c
+
+    def coalesced():
+        # cross-object coalescing: one ChunkOpBatch per node for the whole
+        # batch; intra-batch duplicate chunks ride ref-only ops
         c = DedupCluster.create(8, chunking=spec)
         c.write_objects(list(items))
         return c
 
-    t_serial, cs = _best(serial, reps=1)
-    t_batched, cb = _best(batched, reps=1)
-    assert cs.dedup_ratio() == cb.dedup_ratio(), "batched dedup ratio must match serial"
-    assert cs.unique_bytes_stored() == cb.unique_bytes_stored()
+    # Interleaved best-of-4: the three variants differ by ~10% wall time on
+    # top of identical chunking+fingerprint work, so round-robin the reps to
+    # expose each variant to the same scheduler noise and take per-variant
+    # minima.
+    variants = {"serial": serial, "batched": batched, "coalesced": coalesced}
+    best = {k: float("inf") for k in variants}
+    result = {}
+    for k, fn in variants.items():
+        result[k] = fn()  # warmup
+    for _ in range(4):
+        for k, fn in variants.items():
+            t0 = time.perf_counter()
+            result[k] = fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    t_serial, cs = best["serial"], result["serial"]
+    t_batched, cb = best["batched"], result["batched"]
+    t_coalesced, cc = best["coalesced"], result["coalesced"]
+    for other in (cb, cc):
+        assert cs.dedup_ratio() == other.dedup_ratio(), "dedup ratio must match serial"
+        assert cs.unique_bytes_stored() == other.unique_bytes_stored()
+    assert cc.stats.control_msgs < cb.stats.control_msgs
+    assert cc.stats.net_bytes <= cb.stats.net_bytes
     return {
         "n_objects": n_objects,
         "obj_kib": obj_bytes / 1024,
         "serial_objects_s": n_objects / t_serial,
         "batched_objects_s": n_objects / t_batched,
+        "coalesced_objects_s": n_objects / t_coalesced,
         "speedup": t_serial / t_batched,
-        "dedup_ratio": cb.dedup_ratio(),
+        "coalesced_speedup": t_serial / t_coalesced,
+        "dedup_ratio": cc.dedup_ratio(),
         "control_msgs_serial": cs.stats.control_msgs,
         "control_msgs_batched": cb.stats.control_msgs,
+        "control_msgs_coalesced": cc.stats.control_msgs,
+        "net_bytes_batched": cb.stats.net_bytes,
+        "net_bytes_coalesced": cc.stats.net_bytes,
     }
 
 

@@ -96,10 +96,14 @@ class DedupCheckpointer:
             full_writes.append((obj_name, data))
             manifest["leaves"].append({"key": key, "object": obj_name, "ref": False})
         mbytes = json.dumps(manifest).encode()
-        # One batched write transaction for all full leaves + the manifest.
-        # write_objects commits items in order and raises at the first
-        # failure, so the writes_ok delta counts exactly the committed
-        # leaves — including on a mid-batch failure.
+        # One batched write transaction for all full leaves + the manifest,
+        # riding the cross-object coalesced transport path: one ChunkOpBatch
+        # unicast per storage node for the WHOLE checkpoint, and chunks
+        # shared between leaves (replicated experts, tied embeddings) ship
+        # their bytes once — later leaves ride ref-only ops. write_objects
+        # commits items in order and raises at the first failure, so the
+        # writes_ok delta counts exactly the committed leaves — including on
+        # a mid-batch failure.
         ok_before = self.cluster.stats.writes_ok
         try:
             self.cluster.write_objects(

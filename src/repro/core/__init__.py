@@ -20,6 +20,28 @@ from repro.core.baselines import (
     NoDedupCluster,
 )
 from repro.core.dmshard import CITEntry, DMShard, INVALID, OMAPEntry, VALID
+from repro.core.messages import (
+    CONTROL_MSG_BYTES,
+    ChunkOp,
+    ChunkOpBatch,
+    ChunkRead,
+    DecrefBatch,
+    Message,
+    MigrateChunk,
+    OmapDelete,
+    OmapGet,
+    OmapPut,
+    RawPut,
+    RefOnlyWrite,
+)
+from repro.core.transport import (
+    MessageDropped,
+    Transport,
+    delay,
+    drop,
+    partition,
+    reliable,
+)
 from repro.core.fingerprint import (
     Fingerprint,
     chain_fp,
@@ -55,4 +77,22 @@ __all__ = [
     "ClusterMap",
     "place",
     "primary",
+    "CONTROL_MSG_BYTES",
+    "Message",
+    "ChunkOp",
+    "ChunkOpBatch",
+    "ChunkRead",
+    "DecrefBatch",
+    "MigrateChunk",
+    "OmapDelete",
+    "OmapGet",
+    "OmapPut",
+    "RawPut",
+    "RefOnlyWrite",
+    "Transport",
+    "MessageDropped",
+    "reliable",
+    "drop",
+    "delay",
+    "partition",
 ]

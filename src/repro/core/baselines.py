@@ -9,6 +9,17 @@
   name hash; duplicates on different nodes are NOT found.
 * NoDedupCluster — baseline storage system, straight-through writes
   (paper Fig 4a "Baseline Ceph").
+
+All wire traffic goes through the same ``Transport`` as DedupCluster, so
+``stats.net_bytes``/``stats.control_msgs`` are transport views here too.
+Central-server *internal* work (CIT lookups against its own tables) is
+deliberately NOT network traffic — it is the serialized bottleneck the
+``central_ops`` counter models for fig5a.
+
+The baselines model the *happy path* only: they use the default reliable
+delivery policy and have no rollback/accounting for lost messages. The
+message-failure surface (drop/delay/partition) is a DedupCluster feature;
+attaching a lossy policy to a baseline's transport is unsupported.
 """
 
 from __future__ import annotations
@@ -19,8 +30,27 @@ from repro.core.chunking import ChunkingSpec, chunk_object
 from repro.core.cluster import ClusterStats, ReadError, WriteError
 from repro.core.dmshard import OMAPEntry
 from repro.core.fingerprint import Fingerprint, name_fp, object_fp, sha256_fp
+from repro.core.messages import ChunkOp, ChunkOpBatch, ChunkRead, OmapPut, RawPut
 from repro.core.node import StorageNode
 from repro.core.placement import ClusterMap, place
+from repro.core.transport import Transport
+
+__all__ = [
+    "CentralDedupCluster",
+    "DiskLocalDedupCluster",
+    "NoDedupCluster",
+    "ReadError",
+    "WriteError",
+]
+
+
+def _init_transport_stats(cluster) -> None:
+    """Shared lazy wiring for the baseline dataclasses: a Transport over the
+    live nodes dict and the legacy stats facade on top of it."""
+    if cluster.transport is None:
+        cluster.transport = Transport(handlers=cluster.nodes)
+    if cluster.stats is None:
+        cluster.stats = ClusterStats(cluster.transport)
 
 
 @dataclass
@@ -30,13 +60,17 @@ class CentralDedupCluster:
     cmap: ClusterMap
     chunking: ChunkingSpec = field(default_factory=ChunkingSpec)
     nodes: dict[str, StorageNode] = field(default_factory=dict)
-    stats: ClusterStats = field(default_factory=ClusterStats)
+    transport: Transport | None = None
+    stats: ClusterStats | None = None
     now: int = 0
     # central metadata structures (the bottleneck)
     central_cit: dict[Fingerprint, tuple[int, str]] = field(default_factory=dict)  # fp -> (refcount, node)
     central_omap: dict[str, OMAPEntry] = field(default_factory=dict)
     central_ops: int = 0          # serialized ops through the central server
     central_cpu_bytes: int = 0    # bytes chunked+fingerprinted centrally
+
+    def __post_init__(self) -> None:
+        _init_transport_stats(self)
 
     @classmethod
     def create(cls, n_nodes: int, chunking: ChunkingSpec | None = None) -> "CentralDedupCluster":
@@ -49,13 +83,12 @@ class CentralDedupCluster:
     def write_object(self, name: str, data: bytes) -> Fingerprint:
         self.stats.logical_bytes_written += len(data)
         # client -> central server (everything funnels through it)
-        self.stats.net_bytes += len(data)
+        self.transport.client_transfer("central", len(data))
         self.central_cpu_bytes += len(data)
         chunks = chunk_object(data, self.chunking)
         fps = [sha256_fp(c) for c in chunks]
         for fp, chunk in zip(fps, chunks):
             self.central_ops += 1               # serialized CIT lookup
-            self.stats.control_msgs += 1
             hit = self.central_cit.get(fp)
             if hit is not None:
                 rc, nid = hit
@@ -63,11 +96,8 @@ class CentralDedupCluster:
                 self.nodes[nid].stats.dedup_hits += 1
                 continue
             nid = place(fp, self.cmap, 1)[0]
-            node = self.nodes[nid]
-            node.chunk_store[fp] = chunk
-            node.stats.disk_bytes_written += len(chunk)
-            node.stats.chunk_writes += 1
-            self.stats.net_bytes += len(chunk)  # central -> storage node
+            # central -> storage node: raw data push, no CIT transaction
+            self.transport.send("central", nid, RawPut(fp, chunk), self.now)
             self.central_cit[fp] = (1, nid)
         self.central_ops += 1                   # OMAP write
         self.central_omap[name] = OMAPEntry(name, object_fp(fps), fps, len(data))
@@ -85,8 +115,7 @@ class CentralDedupCluster:
             rc_nid = self.central_cit.get(fp)
             if rc_nid is None:
                 raise ReadError(f"central CIT lost {fp}")
-            out.append(self.nodes[rc_nid[1]].chunk_store[fp])
-            self.stats.net_bytes += len(out[-1])
+            out.append(self.transport.send("central", rc_nid[1], ChunkRead(fp), self.now))
         self.stats.reads_ok += 1
         return b"".join(out)
 
@@ -105,8 +134,12 @@ class DiskLocalDedupCluster:
     cmap: ClusterMap
     chunking: ChunkingSpec = field(default_factory=ChunkingSpec)
     nodes: dict[str, StorageNode] = field(default_factory=dict)
-    stats: ClusterStats = field(default_factory=ClusterStats)
+    transport: Transport | None = None
+    stats: ClusterStats | None = None
     now: int = 0
+
+    def __post_init__(self) -> None:
+        _init_transport_stats(self)
 
     @classmethod
     def create(cls, n_nodes: int, chunking: ChunkingSpec | None = None) -> "DiskLocalDedupCluster":
@@ -120,22 +153,18 @@ class DiskLocalDedupCluster:
         self.stats.logical_bytes_written += len(data)
         nid = place(name_fp(name), self.cmap, 1)[0]   # object placed by name
         node = self.nodes[nid]
-        self.stats.net_bytes += len(data)
+        self.transport.client_transfer(nid, len(data))
         chunks = chunk_object(data, self.chunking)
         fps = [sha256_fp(c) for c in chunks]
-        for fp, chunk in zip(fps, chunks):
-            node.stats.cit_lookups += 1
-            if node.shard.cit_lookup(fp) is not None:   # local-only dedup
-                node.shard.cit_addref(fp)
-                node.stats.dedup_hits += 1
-                continue
-            node.shard.cit_insert(fp, len(chunk), self.now)
-            node.shard.cit_addref(fp)
-            node.shard.cit_set_flag(fp, 1, self.now)
-            node.chunk_store[fp] = chunk
-            node.stats.disk_bytes_written += len(chunk)
-            node.stats.chunk_writes += 1
-        node.shard.omap_put(OMAPEntry(name, object_fp(fps), fps, len(data)))
+        # local dedup transaction: ops originate and apply on the same node
+        ops = tuple(ChunkOp(fp, chunk, origin=nid) for fp, chunk in zip(fps, chunks))
+        self.transport.send(nid, nid, ChunkOpBatch(ops, txn=0), self.now)
+        # per-disk dedup has no async window: the flag update is part of the
+        # local write, so flips drain synchronously.
+        node.cm.drain(node.shard, self.now + node.cm.async_delay)
+        self.transport.send(
+            nid, nid, OmapPut(OMAPEntry(name, object_fp(fps), fps, len(data))), self.now
+        )
         self.stats.writes_ok += 1
         return object_fp(fps)
 
@@ -163,8 +192,12 @@ class NoDedupCluster:
 
     cmap: ClusterMap
     nodes: dict[str, StorageNode] = field(default_factory=dict)
-    stats: ClusterStats = field(default_factory=ClusterStats)
+    transport: Transport | None = None
+    stats: ClusterStats | None = None
     objects: dict[str, str] = field(default_factory=dict)  # name -> node
+
+    def __post_init__(self) -> None:
+        _init_transport_stats(self)
 
     @classmethod
     def create(cls, n_nodes: int) -> "NoDedupCluster":
@@ -177,10 +210,8 @@ class NoDedupCluster:
     def write_object(self, name: str, data: bytes) -> None:
         self.stats.logical_bytes_written += len(data)
         nid = place(name_fp(name), self.cmap, 1)[0]
-        node = self.nodes[nid]
-        self.stats.net_bytes += len(data)
-        node.chunk_store[name_fp(name)] = data
-        node.stats.disk_bytes_written += len(data)
+        # whole object travels client -> node as one raw store
+        self.transport.send("client", nid, RawPut(name_fp(name), data), 0)
         self.stats.writes_ok += 1
 
     def read_object(self, name: str) -> bytes:

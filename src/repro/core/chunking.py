@@ -108,19 +108,40 @@ def cdc_mask(chunk_size: int) -> int:
 _SCAN_TILE = 64 * 1024
 
 
+def _mask_window(mask: int) -> int:
+    """Effective doubling-window for the boundary test ``hash & mask == 0``.
+
+    The gear window hash is H_w[i] = sum_j table[b(i-j)] << j (mod 2^32), so
+    a byte j positions back only influences bits >= j. For a scalar mask
+    2^L - 1 the test reads only the low L bits, which are fixed once the
+    doubling scheme reaches a window of size >= L — levels beyond that
+    cannot change any masked bit. Masks wider than 16 bits need the next
+    power of two (32), i.e. the full window: no savings."""
+    L = mask.bit_length()
+    if L > 16 or mask != (1 << L) - 1:
+        return _WINDOW
+    w = 1
+    while w < L:
+        w <<= 1
+    return w
+
+
 def _cdc_candidates(data: bytes, mask: int, *, backend: str = "numpy") -> np.ndarray:
     """Positions i with window_hash(i) & mask == 0, as a sorted int array.
 
     The numpy path fuses the gear gather, the doubling scheme and the mask
     test tile-by-tile so intermediates never leave cache; only the (sparse)
-    candidate indices are materialized."""
+    candidate indices are materialized. For scalar masks 2^L - 1 with
+    L <= 16 the doubling scheme stops early (``_mask_window``) — identical
+    candidates in fewer passes."""
     if backend != "numpy":
         h = window_hashes(data, backend=backend)
         return np.flatnonzero((h & np.uint32(mask)) == 0)
     buf = np.frombuffer(data, dtype=np.uint8)
     n = buf.size
     m32 = np.uint32(mask)
-    halo = _WINDOW - 1
+    w_eff = _mask_window(mask)
+    halo = w_eff - 1
     hbuf = np.empty(_SCAN_TILE + halo, dtype=np.uint32)
     tmp = np.empty(_SCAN_TILE + halo, dtype=np.uint32)
     out: list[np.ndarray] = []
@@ -130,7 +151,7 @@ def _cdc_candidates(data: bytes, mask: int, *, backend: str = "numpy") -> np.nda
         h = hbuf[:k]
         np.take(_GEAR_NP, buf[lo : lo + k], out=h)
         m = 1
-        while m < _WINDOW:
+        while m < w_eff:
             np.left_shift(h[:-m], np.uint32(m), out=tmp[m:k])
             np.add(h[m:], tmp[m:k], out=h[m:])
             m <<= 1

@@ -6,15 +6,34 @@ change (Fig 1b, made metadata-free by content placement), K-way replication,
 failure injection, and byte-accurate network/disk accounting for the
 benchmark models.
 
-Transaction flow (write):
-  client --(object bytes)--> primary OSS (by name hash)
-  primary: chunk + fingerprint, then per chunk:
-      target(s) = place(chunk_fp, map)  --(chunk bytes)--> target
-      target: CIT lookup -> dedup_hit | repair | store (flag flips async)
-  when all chunk acks arrive: primary writes OMAP entry -> txn complete.
+Transaction flow (write) — every arrow is a typed message on the Transport
+(see core/messages.py for the catalog, core/transport.py for delivery):
 
-A fault injector callback may crash nodes / abort between any two steps,
-which is how the crash-consistency tests drive the paper's failure windows.
+  client --(object bytes: ingress transfer)--> primary OSS (by name hash)
+  primary: chunk + fingerprint (vectorized, whole batch at once), then
+      OmapGet           -> idempotence / replace check
+      ChunkOpBatch      -> one unicast per *target node* carrying every
+                           chunk op routed there — for the WHOLE batch of
+                           objects, not per object (cross-object unicast
+                           coalescing). A batch-local fp->first-writer
+                           cache turns intra-batch duplicate chunks into
+                           ref-only ops before anything hits the wire.
+      target: CIT lookup -> dedup_hit | repaired | restored | stored
+                           (commit flags flip asynchronously, paper §2.4)
+  per object, once its chunk ops are acked:
+      OmapPut           -> OMAP entry on primary (+ replicas) = txn commit
+  on failure: DecrefBatch rolls back the refs the failed object took;
+      unreachable decrements leave flag-0 garbage for GC (paper's model).
+
+Each object in a batch remains its own transaction: a failure raises at
+that object after earlier objects committed — retrying the tail reproduces
+the serial outcome exactly.
+
+Failure surface: a fault injector callback may crash nodes / abort between
+steps (the legacy event points), and the transport's delivery policy may
+drop, delay, or partition messages (the message-level failure space). When
+a fault injector is listening, writes auto-select the chunk-granular
+message shape so every per-chunk event window stays observable.
 """
 
 from __future__ import annotations
@@ -30,14 +49,25 @@ from repro.core.fingerprint import (
     name_fp,
     object_fp,
 )
+from repro.core.messages import (
+    CONTROL_MSG_BYTES,
+    ChunkOp,
+    ChunkOpBatch,
+    ChunkRead,
+    DecrefBatch,
+    MigrateChunk,
+    OmapDelete,
+    OmapGet,
+    OmapPut,
+    RefOnlyWrite,
+)
 from repro.core.node import ChunkMissing, NodeDown, StorageNode
 from repro.core.placement import ClusterMap, place
+from repro.core.transport import MessageDropped, Transport
 
 # fault injector signature: (event, context-dict) -> None. May raise
 # TransactionAbort or call cluster.crash_node() to model failures.
 FaultInjector = Callable[[str, dict], None]
-
-CONTROL_MSG_BYTES = 64  # modeled size of a lookup/ack/refcount message
 
 
 class TransactionAbort(RuntimeError):
@@ -52,18 +82,45 @@ class ReadError(RuntimeError):
     pass
 
 
-@dataclass
 class ClusterStats:
-    logical_bytes_written: int = 0
-    net_bytes: int = 0                 # payload bytes crossing the network
-    control_msgs: int = 0              # lookup/ack/refcount unicasts
-    lookup_unicasts: int = 0
-    lookup_broadcasts: int = 0         # always 0 for us; used by baselines
-    writes_ok: int = 0
-    writes_failed: int = 0
-    reads_ok: int = 0
-    rebalance_bytes_moved: int = 0
-    rebalance_chunks_moved: int = 0
+    """Legacy stats facade. Transaction-outcome counters live here; all
+    network/message counters are *views* over the Transport's accounting
+    (legacy field names preserved — nothing hand-maintains them anymore)."""
+
+    def __init__(self, transport: Transport):
+        self._transport = transport
+        self.logical_bytes_written = 0
+        self.writes_ok = 0
+        self.writes_failed = 0
+        self.reads_ok = 0
+        self.rebalance_bytes_moved = 0
+        self.rebalance_chunks_moved = 0
+
+    @property
+    def net_bytes(self) -> int:
+        """Payload bytes crossing the network (transport view)."""
+        return self._transport.net_bytes
+
+    @property
+    def control_msgs(self) -> int:
+        """Messages sent through the transport (lookup/ack/refcount/... )."""
+        return self._transport.messages_sent
+
+    @property
+    def lookup_unicasts(self) -> int:
+        return self._transport.lookup_unicasts
+
+    @property
+    def lookup_broadcasts(self) -> int:
+        return self._transport.lookup_broadcasts  # always 0 — the paper's point
+
+    def __repr__(self) -> str:  # debugging convenience
+        return (
+            f"ClusterStats(logical={self.logical_bytes_written}, "
+            f"net={self.net_bytes}, msgs={self.control_msgs}, "
+            f"lookups={self.lookup_unicasts}, ok={self.writes_ok}, "
+            f"failed={self.writes_failed}, reads={self.reads_ok})"
+        )
 
 
 @dataclass
@@ -71,7 +128,8 @@ class DedupCluster:
     cmap: ClusterMap
     chunking: ChunkingSpec = field(default_factory=ChunkingSpec)
     nodes: dict[str, StorageNode] = field(default_factory=dict)
-    stats: ClusterStats = field(default_factory=ClusterStats)
+    transport: Transport | None = None
+    stats: ClusterStats | None = None
     now: int = 0
     fault_injector: FaultInjector | None = None
     send_fingerprint_first: bool = False   # beyond-paper: lookup-before-send
@@ -79,7 +137,17 @@ class DedupCluster:
     # is listening, since the batched unicast has no between-chunk event
     # windows); True/False force it regardless of observers.
     batch_unicasts: bool | None = None
+    # Cross-object unicast coalescing: one ChunkOpBatch per node for a whole
+    # write_objects() batch (False reproduces the per-object message shape).
+    coalesce_batches: bool = True
     _txn_counter: int = 0
+
+    def __post_init__(self) -> None:
+        if self.transport is None:
+            self.transport = Transport(handlers=self.nodes)
+        self.transport.fault_hook = self._transport_fault
+        if self.stats is None:
+            self.stats = ClusterStats(self.transport)
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
@@ -88,6 +156,7 @@ class DedupCluster:
         n_nodes: int,
         replicas: int = 1,
         chunking: ChunkingSpec | None = None,
+        policy=None,
         **kw,
     ) -> "DedupCluster":
         ids = tuple(f"oss{i}" for i in range(n_nodes))
@@ -95,6 +164,8 @@ class DedupCluster:
         c = cls(cmap=cmap, chunking=(chunking or ChunkingSpec()).normalized(), **kw)
         for nid in ids:
             c.nodes[nid] = StorageNode(nid)
+        if policy is not None:
+            c.transport.policy = policy
         return c
 
     def node(self, nid: str) -> StorageNode:
@@ -121,6 +192,9 @@ class DedupCluster:
         if self.fault_injector is not None:
             self.fault_injector(event, {"now": self.now, **ctx})
 
+    def _transport_fault(self, event: str, ctx: dict) -> None:
+        self._fault(event, **ctx)
+
     # ------------------------------------------------------------ placement
     def chunk_targets(self, fp: Fingerprint) -> list[str]:
         return place(fp, self.cmap)
@@ -142,32 +216,286 @@ class DedupCluster:
         ``write_object`` over ``items`` (same fingerprints, refcounts, OMAP
         state, rollback behavior and fault event points; on failure the
         exception propagates after earlier items committed, exactly like the
-        loop) — but vectorized where the loop is serial:
+        loop) — but vectorized and coalesced where the loop is serial:
 
         1. chunking (vectorized CDC) + fingerprinting run over the whole
            batch in one pass (``fingerprint_many``);
-        2. each object's chunk ops are grouped per target node into one
-           batched unicast (``StorageNode.receive_chunks``), so control
-           messages scale with nodes touched, not chunks written.
+        2. chunk ops for the WHOLE batch are grouped per target node into
+           one ``ChunkOpBatch`` unicast each (cross-object coalescing), so
+           control messages scale with nodes touched, not objects x nodes;
+        3. a batch-local fp->first-writer cache turns chunks repeated
+           *across* objects in the batch into ref-only ops — duplicate
+           bytes never hit the wire.
 
-        Each object remains its own transaction. ``lookup_unicasts`` counts
-        fingerprint lookups carried (batch-invariant); ``control_msgs``
-        counts messages, which batching reduces.
+        ``lookup_unicasts`` counts fingerprint lookups carried (batch-
+        invariant); ``control_msgs`` counts messages, which coalescing
+        reduces; ``net_bytes`` can only shrink (intra-batch duplicates) —
+        for batches that commit; a mid-batch failure has already shipped
+        the tail's bytes, which transport counters do not un-count.
+
+        Transport-policy caveat: the coalesced ChunkOpBatch is emitted by
+        the client-side ingest layer (src="client", like the read path), so
+        node<->node ``partition`` policies do not sever it even though they
+        would sever the serial loop's primary-routed unicasts. To evaluate
+        partitions against the paper's primary-routed write path, set
+        ``coalesce_batches=False``.
         """
         prepped: list[tuple[str, bytes, list[bytes]]] = []
         for name, data in items:
             prepped.append((name, data, chunk_object(data, self.chunking)))
         all_fps = fingerprint_many([c for _, _, chunks in prepped for c in chunks])
-        out: list[Fingerprint] = []
+        objs: list[tuple[str, bytes, list[bytes], list[Fingerprint]]] = []
         off = 0
         for name, data, chunks in prepped:
-            fps = all_fps[off : off + len(chunks)]
+            objs.append((name, data, chunks, all_fps[off : off + len(chunks)]))
             off += len(chunks)
-            out.append(self._write_prepared(name, data, chunks, fps))
+
+        batched = (
+            self.batch_unicasts
+            if self.batch_unicasts is not None
+            else self.fault_injector is None
+        )
+        if not (batched and self.coalesce_batches and len(objs) > 1):
+            return [
+                self._write_prepared(name, data, chunks, fps, batched)
+                for name, data, chunks, fps in objs
+            ]
+
+        # Cross-object coalescing requires every prev-object check in a wave
+        # to see committed OMAP state, so a batch that rewrites a name it
+        # wrote earlier in the same batch splits into waves at the repeat.
+        out: list[Fingerprint] = []
+        wave: list = []
+        names: set[str] = set()
+        for obj in objs:
+            if obj[0] in names:
+                out.extend(self._write_wave(wave))
+                wave, names = [], set()
+            wave.append(obj)
+            names.add(obj[0])
+        if wave:
+            out.extend(self._write_wave(wave))
         return out
 
+    # ---------------------------------------------- coalesced batch write
+    def _write_wave(self, wave: list) -> list[Fingerprint]:
+        """One coalesced write wave (unique object names).
+
+        Three phases — plan (per object, in order: ingress, idempotence/
+        replace check, target placement, intra-batch dedup), send (ONE
+        ChunkOpBatch per target node for the whole wave), commit (per
+        object, in order: OmapPut; rollback + raise at the first failure,
+        releasing the refs of every not-yet-committed object so a retry of
+        the tail reproduces the serial outcome).
+        """
+        plans: list[dict] = []
+        # (exc, obj size, counted in writes_failed) — a planning failure is
+        # raised only after the objects planned before it have committed.
+        planning_failure: tuple[Exception, int, bool] | None = None
+        first_writer: set[Fingerprint] = set()
+
+        for name, data, chunks, fps in wave:
+            self._txn_counter += 1
+            txn = self._txn_counter
+            self.stats.logical_bytes_written += len(data)
+            omap_nodes = self._live(self.omap_targets(name))
+            if not omap_nodes:
+                self.stats.writes_failed += 1
+                planning_failure = (
+                    WriteError(f"no live OMAP target for {name!r}"),
+                    len(data),
+                    True,
+                )
+                break
+            primary = omap_nodes[0]
+            self.transport.client_transfer(primary, len(data))
+            try:
+                self._fault("primary_selected", name=name, primary=primary, txn=txn)
+                prev = self._omap_lookup(name, src=primary, strict=True)
+            except TransactionAbort as e:
+                # The serial loop re-raises planning-phase aborts uncounted;
+                # earlier objects still commit before we propagate it.
+                planning_failure = (e, len(data), False)
+                break
+            except WriteError as e:
+                self.stats.writes_failed += 1
+                planning_failure = (e, len(data), True)
+                break
+            if prev is not None:
+                if prev.object_fp == object_fp(fps):
+                    self.stats.writes_ok += 1
+                    plans.append(
+                        {"kind": "done", "name": name, "ofp": prev.object_fp,
+                         "size": len(data)}
+                    )
+                    continue
+                # Rewriting different content replaces the old object — but
+                # the old refs (the fetched ``prev`` entry, kept on the
+                # plan) are released at *commit* time, so an earlier
+                # object's failure (which aborts this whole tail) leaves the
+                # previous version intact, exactly like the serial loop that
+                # never reached this item.
+
+            ops: list[tuple[int, Fingerprint, bytes | None, list[str]]] = []
+            failed_chunk: int | None = None
+            for i, (fp, chunk) in enumerate(zip(fps, chunks)):
+                live = self._live(self.chunk_targets(fp))
+                if not live:
+                    failed_chunk = i
+                    break
+                # Intra-batch dedup: the first writer of a fingerprint ships
+                # bytes; every later op in the wave is ref-only (the bytes
+                # are already on the same placement targets).
+                payload = None if fp in first_writer else chunk
+                first_writer.add(fp)
+                ops.append((i, fp, payload, live))
+            if failed_chunk is not None:
+                self.stats.writes_failed += 1
+                cause = WriteError(f"chunk {failed_chunk} of {name!r}: no live target")
+                exc = WriteError(f"write {name!r} failed: {cause}")
+                exc.__cause__ = cause
+                planning_failure = (exc, len(data), True)
+                break
+            plans.append(
+                {
+                    "kind": "write",
+                    "name": name,
+                    "data": data,
+                    "fps": fps,
+                    "ops": ops,
+                    "primary": primary,
+                    "txn": txn,
+                    "prev": prev,  # non-None only for replaces (done short-circuits)
+                    "acked": {i: [] for i, _, _, _ in ops},
+                }
+            )
+
+        # ---- send: one ChunkOpBatch per target node for the whole wave ----
+        node_ops: dict[str, list[ChunkOp]] = {}
+        node_refs: dict[str, list[tuple[int, int]]] = {}  # (plan idx, chunk idx)
+        for pi, plan in enumerate(plans):
+            if plan["kind"] != "write":
+                continue
+            primary = plan["primary"]
+            for i, fp, payload, live in plan["ops"]:
+                op = ChunkOp(fp, payload, origin=primary)
+                for t in live:
+                    node_ops.setdefault(t, []).append(op)
+                    node_refs.setdefault(t, []).append((pi, i))
+        batch_txn = self._txn_counter
+        for t, ops in node_ops.items():
+            msg = ChunkOpBatch(
+                ops=tuple(ops),
+                txn=batch_txn,
+                fp_first=self.send_fingerprint_first,
+            )
+            try:
+                outcomes = self.transport.send("client", t, msg, self.now)
+            except (MessageDropped, NodeDown, TransactionAbort):
+                # Lost/aborted before delivery: nothing acked on this node;
+                # the commit phase fails (and rolls back) any object that
+                # ends up with an unacked chunk.
+                continue
+            for (pi, i), outcome in zip(node_refs[t], outcomes):
+                if outcome != "miss":
+                    plans[pi]["acked"][i].append(t)
+
+        # ---- commit: per object, in order --------------------------------
+        results: list[Fingerprint] = []
+        failure: Exception | None = None
+        for plan in plans:
+            if plan["kind"] == "done":
+                if failure is not None:
+                    # Serial never reached this item; undo its no-op commit.
+                    self.stats.writes_ok -= 1
+                    self.stats.logical_bytes_written -= plan["size"]
+                else:
+                    results.append(plan["ofp"])
+                continue
+            if failure is not None:
+                # An earlier object already failed: this one never commits.
+                # Undo its refs and its logical accounting (a retry of the
+                # tail will re-run it, exactly like the serial loop).
+                self._rollback_refs(plan["primary"], plan["acked"], plan["ops"])
+                self.stats.logical_bytes_written -= len(plan["data"])
+                continue
+            name, primary = plan["name"], plan["primary"]
+            try:
+                bad = next(
+                    (i for i, _, _, _ in plan["ops"] if not plan["acked"][i]), None
+                )
+                if bad is not None:
+                    raise WriteError(f"chunk {bad} of {name!r}: no live target")
+                if plan["prev"] is not None:
+                    # Release the replaced version's refs now that this
+                    # object is definitely committing. The new ops already
+                    # took their refs, so shared chunks dip to N, not 0 —
+                    # same end state as the serial delete-then-write order.
+                    self._delete_entry(plan["prev"], src=primary)
+                self._fault("before_omap", name=name, txn=plan["txn"])
+                if not self.nodes[primary].alive:
+                    raise NodeDown(primary)
+                ofp = object_fp(plan["fps"])
+                entry = OMAPEntry(name, ofp, list(plan["fps"]), len(plan["data"]))
+                wrote = False
+                for t in self._live(self.omap_targets(name)):
+                    try:
+                        self.transport.send(primary, t, OmapPut(entry), self.now)
+                        wrote = True
+                    except MessageDropped:
+                        pass
+                if not wrote:
+                    raise WriteError(f"no live OMAP target for {name!r} at commit")
+            except (NodeDown, TransactionAbort, WriteError) as e:
+                self._rollback_refs(primary, plan["acked"], plan["ops"])
+                self.stats.writes_failed += 1
+                failure = WriteError(f"write {name!r} failed: {e}")
+                failure.__cause__ = e
+                continue
+            self.stats.writes_ok += 1
+            results.append(ofp)
+
+        if failure is not None:
+            if planning_failure is not None:
+                # Serial would have stopped at the commit failure, never
+                # reaching the planning-failed item: undo its accounting.
+                if planning_failure[2]:
+                    self.stats.writes_failed -= 1
+                self.stats.logical_bytes_written -= planning_failure[1]
+            raise failure
+        if planning_failure is not None:
+            raise planning_failure[0]
+        return results
+
+    def _rollback_refs(self, src: str, acked: dict, ops) -> None:
+        """Release the refcounts one failed wave object took (plan shape)."""
+        self._rollback_acked(src, ((fp, acked[i]) for i, fp, _, _ in ops))
+
+    def _rollback_acked(self, src: str, pairs) -> None:
+        """Release acked (fp, nodes) refs, one DecrefBatch per node.
+        Unreachable decrements leave flag-0 garbage for GC — the paper's
+        failure model."""
+        undo: dict[str, list[Fingerprint]] = {}
+        for fp, on in pairs:
+            for t in on:
+                undo.setdefault(t, []).append(fp)
+        for t, undo_fps in undo.items():
+            node = self.nodes.get(t)
+            if node is None or not node.alive:
+                continue
+            try:
+                self.transport.send(src, t, DecrefBatch(tuple(undo_fps)), self.now)
+            except (MessageDropped, NodeDown):
+                pass
+
+    # ------------------------------------------------- per-object write path
     def _write_prepared(
-        self, name: str, data: bytes, chunks: list[bytes], fps: list[Fingerprint]
+        self,
+        name: str,
+        data: bytes,
+        chunks: list[bytes],
+        fps: list[Fingerprint],
+        batched: bool,
     ) -> Fingerprint:
         """One object's write transaction over pre-chunked, pre-fingerprinted
         content (paper Fig 3, steps after the primary's chunk+fingerprint)."""
@@ -181,25 +509,24 @@ class DedupCluster:
             self.stats.writes_failed += 1
             raise WriteError(f"no live OMAP target for {name!r}")
         primary = omap_nodes[0]
-        self.stats.net_bytes += len(data)
+        self.transport.client_transfer(primary, len(data))
         self._fault("primary_selected", name=name, primary=primary, txn=txn)
 
         # Idempotence: rewriting an identical object is a no-op; rewriting
         # different content under an existing name replaces it (old refs
         # released first so refcounts stay exact).
-        prev = self._omap_lookup(name)
+        try:
+            prev = self._omap_lookup(name, src=primary, strict=True)
+        except WriteError:
+            self.stats.writes_failed += 1
+            raise
         if prev is not None:
             if prev.object_fp == object_fp(fps):
                 self.stats.writes_ok += 1
                 return prev.object_fp
-            self.delete_object(name)
+            self._delete_entry(prev, src=primary)
 
         # 2. fingerprint-routed chunk unicasts, batched per target node.
-        batched = (
-            self.batch_unicasts
-            if self.batch_unicasts is not None
-            else self.fault_injector is None
-        )
         acked: list[tuple[Fingerprint, list[str]]] = []
         try:
             if batched:
@@ -213,7 +540,7 @@ class DedupCluster:
                 # (before/after_chunk_op at each index).
                 for i, (fp, chunk) in enumerate(zip(fps, chunks)):
                     self._fault("before_chunk_op", name=name, index=i, fp=fp, txn=txn)
-                    written_on = self._write_chunk(primary, fp, chunk, txn)
+                    written_on = self._send_chunk_granular(primary, fp, chunk, txn)
                     if not written_on:
                         raise WriteError(f"chunk {i} of {name!r}: no live target")
                     acked.append((fp, written_on))
@@ -227,26 +554,17 @@ class DedupCluster:
             entry = OMAPEntry(name=name, object_fp=ofp, chunk_fps=list(fps), size=len(data))
             wrote_omap = False
             for t in self._live(self.omap_targets(name)):
-                self.nodes[t].shard.omap_put(
-                    OMAPEntry(entry.name, entry.object_fp, list(entry.chunk_fps), entry.size)
-                )
-                wrote_omap = True
+                try:
+                    self.transport.send(primary, t, OmapPut(entry), self.now)
+                    wrote_omap = True
+                except MessageDropped:
+                    pass
             if not wrote_omap:
                 raise WriteError(f"no live OMAP target for {name!r} at commit")
         except (NodeDown, TransactionAbort, WriteError) as e:
-            # Failed object transaction: best-effort rollback of refcounts we
-            # took (batched per node). Unreachable decrements leave flag-0
-            # garbage for GC — the paper's failure model.
-            undo: dict[str, list[Fingerprint]] = {}
-            for fp, on in acked:
-                for t in on:
-                    undo.setdefault(t, []).append(fp)
-            for t, undo_fps in undo.items():
-                node = self.nodes[t]
-                if node.alive:
-                    node.decref_chunks(undo_fps, self.now)
-                    # one message per node when batching; per-op otherwise
-                    self.stats.control_msgs += 1 if batched else len(undo_fps)
+            # Failed object transaction: best-effort rollback of the
+            # refcounts we took.
+            self._rollback_acked(primary, acked)
             self.stats.writes_failed += 1
             raise WriteError(f"write {name!r} failed: {e}") from e
 
@@ -256,14 +574,15 @@ class DedupCluster:
     def _route_chunks_batched(
         self, primary: str, fps: list[Fingerprint], chunks: list[bytes], txn: int
     ) -> tuple[list[tuple[Fingerprint, list[str]]], int | None]:
-        """Group one object's chunk ops per target node -> one batched unicast
+        """Group one object's chunk ops per target node -> one ChunkOpBatch
         each. Returns (acked, fail_idx); fail_idx is the first chunk with no
-        live target, and — matching the serial abort point — no op at or past
-        it is applied."""
+        live target (or, under a lossy policy, no surviving ack) and —
+        matching the serial abort point — no op at or past a planning
+        failure is applied."""
         targets_per_chunk: list[list[str]] = []
         fail_idx: int | None = None
         for i, fp in enumerate(fps):
-            live = [t for t in self.chunk_targets(fp) if self.nodes[t].alive]
+            live = self._live(self.chunk_targets(fp))
             if not live:
                 fail_idx = i
                 break
@@ -274,99 +593,95 @@ class DedupCluster:
             for t in live:
                 per_node.setdefault(t, []).append(i)
 
+        acked_on: dict[int, list[str]] = {i: [] for i in range(len(targets_per_chunk))}
         for t, idxs in per_node.items():
-            node = self.nodes[t]
-            ops = [(fps[i], chunks[i]) for i in idxs]
-            # One message carries |ops| fingerprint lookups + chunk writes.
-            self.stats.lookup_unicasts += len(ops)
-            self.stats.control_msgs += 1
-            outcomes = node.receive_chunks(ops, self.now, txn)
-            if t != primary:
-                if self.send_fingerprint_first:
-                    # beyond-paper: 64B fp probe first; bytes travel on miss
-                    # only. A probe hit is exactly a dedup_hit outcome.
-                    self.stats.net_bytes += sum(
-                        len(c) for (_, c), o in zip(ops, outcomes) if o != "dedup_hit"
-                    )
-                else:
-                    # paper-faithful: chunk bytes always travel to the target.
-                    self.stats.net_bytes += sum(len(c) for _, c in ops)
+            msg = ChunkOpBatch(
+                ops=tuple(ChunkOp(fps[i], chunks[i], origin=primary) for i in idxs),
+                txn=txn,
+                fp_first=self.send_fingerprint_first,
+            )
+            try:
+                outcomes = self.transport.send(primary, t, msg, self.now)
+            except MessageDropped:
+                continue  # this node's ops are lost; ack check below decides
+            for i, outcome in zip(idxs, outcomes):
+                if outcome != "miss":
+                    acked_on[i].append(t)
 
-        acked = list(zip(fps, targets_per_chunk))
+        acked = [(fps[i], acked_on[i]) for i in range(len(targets_per_chunk)) if acked_on[i]]
+        if fail_idx is None:
+            lost = next((i for i in range(len(targets_per_chunk)) if not acked_on[i]), None)
+            if lost is not None:
+                fail_idx = lost
         return acked, fail_idx
 
-    def _write_chunk(self, primary: str, fp: Fingerprint, chunk: bytes, txn: int) -> list[str]:
-        """Route one chunk to its replica set. Returns nodes that took a ref."""
+    def _send_chunk_granular(
+        self, primary: str, fp: Fingerprint, chunk: bytes, txn: int
+    ) -> list[str]:
+        """Route one chunk to its replica set, one single-op unicast per
+        replica. Returns nodes that took a ref."""
         written_on: list[str] = []
         for t in self.chunk_targets(fp):
-            node = self.nodes[t]
-            if not node.alive:
+            if not self.nodes[t].alive:
                 continue
-            # fingerprint lookup is part of the same unicast (no broadcast!)
-            self.stats.lookup_unicasts += 1
-            self.stats.control_msgs += 1
-            if self.send_fingerprint_first:
-                # beyond-paper: 64B fp probe first; ship bytes only on miss.
-                e = node.cit_entry(fp)
-                hit = e is not None and e.is_valid()
-                if not hit and t != primary:
-                    self.stats.net_bytes += len(chunk)
-            elif t != primary:
-                # paper-faithful: chunk bytes always travel to the target.
-                self.stats.net_bytes += len(chunk)
-            node.receive_chunk(fp, chunk, self.now, txn)
-            written_on.append(t)
+            msg = ChunkOpBatch(
+                ops=(ChunkOp(fp, chunk, origin=primary),),
+                txn=txn,
+                fp_first=self.send_fingerprint_first,
+            )
+            try:
+                outcomes = self.transport.send(primary, t, msg, self.now)
+            except MessageDropped:
+                continue
+            if outcomes[0] != "miss":
+                written_on.append(t)
         return written_on
 
     def write_object_by_ref(self, name: str, src_name: str) -> Fingerprint | None:
         """Reference-only write: create object `name` with the same layout as
         `src_name`, incrementing chunk refcounts without moving data
-        (checkpointer device-fp fast path). Fails (None) if any chunk is
-        invalid and unrepairable, in which case the caller falls back to a
-        full write."""
-        src = self._omap_lookup(src_name)
+        (checkpointer device-fp fast path) — one RefOnlyWrite unicast per
+        target node. Fails (None) if any chunk is invalid and unrepairable,
+        in which case the caller falls back to a full write."""
+        src = self._omap_lookup(src_name, src="client")
         if src is None:
             return None
-        taken: list[tuple[Fingerprint, list[str]]] = []
-        ok = True
+        per_node: dict[str, list[Fingerprint]] = {}
         for fp in src.chunk_fps:
-            on: list[str] = []
             for t in self._live(self.chunk_targets(fp)):
-                node = self.nodes[t]
-                self.stats.lookup_unicasts += 1
-                self.stats.control_msgs += 1
-                e = node.cit_entry(fp)
-                if e is None:
-                    continue
-                if not e.is_valid():
-                    # paper §2.4 consistency check via stat
-                    if not node.has_chunk(fp):
-                        continue
-                    node.shard.cit_set_flag(fp, 1, self.now)
-                    node.stats.repairs += 1
-                node.shard.cit_addref(fp)
-                on.append(t)
-            if not on:
-                ok = False
-                break
-            taken.append((fp, on))
-        if not ok:
-            for fp, on in taken:
-                for t in on:
-                    self.nodes[t].decref_chunk(fp, self.now)
+                per_node.setdefault(t, []).append(fp)
+        taken: dict[str, list[Fingerprint]] = {}
+        holders: dict[Fingerprint, int] = {fp: 0 for fp in src.chunk_fps}
+        for t, fps in per_node.items():
+            try:
+                results = self.transport.send(
+                    "client", t, RefOnlyWrite(tuple(fps)), self.now
+                )
+            except (MessageDropped, NodeDown):
+                continue
+            for fp, res in zip(fps, results):
+                if res != "miss":
+                    taken.setdefault(t, []).append(fp)
+                    holders[fp] += 1
+
+        def _undo() -> None:
+            self._rollback_acked(
+                "client", ((fp, (t,)) for t, fps in taken.items() for fp in fps)
+            )
+
+        if any(cnt == 0 for cnt in holders.values()):
+            _undo()
             return None
         entry = OMAPEntry(name, src.object_fp, list(src.chunk_fps), src.size)
         wrote = False
         for t in self._live(self.omap_targets(name)):
-            self.nodes[t].shard.omap_put(
-                OMAPEntry(entry.name, entry.object_fp, list(entry.chunk_fps), entry.size)
-            )
-            self.stats.control_msgs += 1
-            wrote = True
+            try:
+                self.transport.send("client", t, OmapPut(entry), self.now)
+                wrote = True
+            except MessageDropped:
+                pass
         if not wrote:
-            for fp, on in taken:
-                for t in on:
-                    self.nodes[t].decref_chunk(fp, self.now)
+            _undo()
             return None
         self.stats.writes_ok += 1
         self.stats.logical_bytes_written += src.size
@@ -374,7 +689,7 @@ class DedupCluster:
 
     # ------------------------------------------------------------------ read
     def read_object(self, name: str) -> bytes:
-        entry = self._omap_lookup(name)
+        entry = self._omap_lookup(name, src="client")
         if entry is None:
             raise ReadError(f"object {name!r} not found")
         parts: list[bytes] = []
@@ -386,41 +701,65 @@ class DedupCluster:
         self.stats.reads_ok += 1
         return data
 
-    def _omap_lookup(self, name: str) -> OMAPEntry | None:
+    def _omap_lookup(
+        self, name: str, src: str = "client", strict: bool = False
+    ) -> OMAPEntry | None:
+        """Probe the live OMAP replicas for ``name``. With ``strict=True``
+        (the write path's idempotence/replace check) a lost probe with no
+        surviving answer raises instead of reporting 'absent' — assuming
+        absence could skip releasing a replaced version's refs, leaking
+        refcounts that GC can never reclaim."""
+        lost = False
         for t in self._live(self.omap_targets(name)):
-            self.stats.control_msgs += 1
-            e = self.nodes[t].shard.omap_get(name)
+            try:
+                e = self.transport.send(src, t, OmapGet(name), self.now)
+            except (MessageDropped, NodeDown):
+                lost = True
+                continue
             if e is not None:
                 return e
+        if strict and lost:
+            raise WriteError(f"OMAP lookup for {name!r} lost in transit")
         return None
 
     def _read_chunk(self, fp: Fingerprint) -> bytes:
         last: Exception | None = None
         for t in self.chunk_targets(fp):
-            node = self.nodes[t]
-            if not node.alive:
+            if not self.nodes[t].alive:
                 continue
             try:
-                data = node.read_chunk(fp, self.now)
-                self.stats.net_bytes += len(data)
-                return data
-            except ChunkMissing as e:
+                return self.transport.send("client", t, ChunkRead(fp), self.now)
+            except (ChunkMissing, MessageDropped, NodeDown) as e:
                 last = e
         raise ReadError(f"chunk {fp} unreadable on all replicas: {last}")
 
     # ---------------------------------------------------------------- delete
-    def delete_object(self, name: str) -> bool:
-        entry = self._omap_lookup(name)
+    def delete_object(self, name: str, _src: str = "client") -> bool:
+        entry = self._omap_lookup(name, src=_src)
         if entry is None:
             return False
-        for t in self._live(self.omap_targets(name)):
-            self.nodes[t].shard.omap_delete(name)
-            self.stats.control_msgs += 1
+        self._delete_entry(entry, src=_src)
+        return True
+
+    def _delete_entry(self, entry: OMAPEntry, src: str) -> None:
+        """Remove an already-fetched OMAP entry and release its chunk refs.
+        The write path's replace passes the entry from its strict lookup
+        here directly — re-probing could lose the probe under a lossy
+        policy and leak the old version's refcounts forever."""
+        for t in self._live(self.omap_targets(entry.name)):
+            try:
+                self.transport.send(src, t, OmapDelete(entry.name), self.now)
+            except (MessageDropped, NodeDown):
+                pass
+        per_node: dict[str, list[Fingerprint]] = {}
         for fp in entry.chunk_fps:
             for t in self._live(self.chunk_targets(fp)):
-                self.nodes[t].decref_chunk(fp, self.now)
-                self.stats.control_msgs += 1
-        return True
+                per_node.setdefault(t, []).append(fp)
+        for t, fps in per_node.items():
+            try:
+                self.transport.send(src, t, DecrefBatch(tuple(fps)), self.now)
+            except (MessageDropped, NodeDown):
+                pass
 
     # ------------------------------------------------------------- rebalance
     def set_map(self, new_map: ClusterMap) -> None:
@@ -428,7 +767,10 @@ class DedupCluster:
 
         Content placement means we only *move* chunks; no dedup-metadata
         location rewrite happens anywhere (the paper's key win). CIT entries
-        travel with their chunks; OMAP entries move by name hash.
+        travel with their chunks (MigrateChunk); OMAP entries move by name
+        hash (OmapPut with migrate=True). Under a lossy delivery policy a
+        move can be lost in flight — replicas and ``scrub`` are the repair
+        story, exactly as for node loss.
         """
         for nid in new_map.nodes:
             if nid not in self.nodes:
@@ -448,19 +790,17 @@ class DedupCluster:
                 entry = node.shard.cit_lookup(fp)
                 if entry is not None:
                     node.shard.cit_remove(fp)
+                snap = entry.snapshot() if entry is not None else None
                 moved = False
                 for t in self._live(targets):
-                    dst = self.nodes[t]
-                    if fp not in dst.chunk_store:
-                        dst.chunk_store[fp] = data
-                        dst.stats.disk_bytes_written += len(data)
-                        self.stats.net_bytes += len(data)
+                    needs_bytes = fp not in self.nodes[t].chunk_store
+                    msg = MigrateChunk(fp, data if needs_bytes else None, snap)
+                    try:
+                        self.transport.send(nid, t, msg, self.now)
+                    except (MessageDropped, NodeDown):
+                        continue
+                    if needs_bytes:
                         moved = True
-                    if entry is not None and dst.shard.cit_lookup(fp) is None:
-                        ne = dst.shard.cit_insert(fp, entry.size, self.now)
-                        ne.refcount = entry.refcount
-                        ne.flag = entry.flag
-                        ne.invalid_since = entry.invalid_since
                 if moved:
                     self.stats.rebalance_chunks_moved += 1
                     self.stats.rebalance_bytes_moved += len(data)
@@ -471,13 +811,14 @@ class DedupCluster:
                     continue
                 entry = node.shard.cit_lookup(fp)
                 node.shard.cit_remove(fp)
+                if entry is None:
+                    continue
+                snap = entry.snapshot()
                 for t in self._live(targets):
-                    dst = self.nodes[t]
-                    if dst.shard.cit_lookup(fp) is None and entry is not None:
-                        ne = dst.shard.cit_insert(fp, entry.size, self.now)
-                        ne.refcount = entry.refcount
-                        ne.flag = entry.flag
-                        ne.invalid_since = entry.invalid_since
+                    try:
+                        self.transport.send(nid, t, MigrateChunk(fp, None, snap), self.now)
+                    except (MessageDropped, NodeDown):
+                        continue
             # --- migrate OMAP entries by object-name hash --------------------
             for name in list(node.shard.omap.keys()):
                 targets = place(name_fp(name), new_map)
@@ -486,10 +827,10 @@ class DedupCluster:
                 e = node.shard.omap_delete(name)
                 assert e is not None
                 for t in self._live(targets):
-                    self.nodes[t].shard.omap_put(
-                        OMAPEntry(e.name, e.object_fp, list(e.chunk_fps), e.size)
-                    )
-                    self.stats.net_bytes += CONTROL_MSG_BYTES
+                    try:
+                        self.transport.send(nid, t, OmapPut(e, migrate=True), self.now)
+                    except (MessageDropped, NodeDown):
+                        continue
         _ = old
 
     def add_node(self, weight: float = 1.0) -> str:
@@ -501,8 +842,8 @@ class DedupCluster:
         self.set_map(self.cmap.without_node(nid))
 
     def scrub(self) -> int:
-        """Re-replication repair: ensure every chunk is on all live targets.
-        Returns number of chunk copies restored."""
+        """Re-replication repair: ensure every chunk is on all live targets
+        (one MigrateChunk per missing copy). Returns copies restored."""
         restored = 0
         holders: dict[Fingerprint, list[str]] = {}
         for nid, node in self.nodes.items():
@@ -513,17 +854,15 @@ class DedupCluster:
         for fp, have in holders.items():
             src = self.nodes[have[0]]
             entry = src.shard.cit_lookup(fp)
+            snap = entry.snapshot() if entry is not None else None
             for t in self._live(self.chunk_targets(fp)):
-                dst = self.nodes[t]
-                if fp in dst.chunk_store:
+                if fp in self.nodes[t].chunk_store:
                     continue
-                dst.chunk_store[fp] = src.chunk_store[fp]
-                dst.stats.disk_bytes_written += len(src.chunk_store[fp])
-                self.stats.net_bytes += len(src.chunk_store[fp])
-                if dst.shard.cit_lookup(fp) is None and entry is not None:
-                    ne = dst.shard.cit_insert(fp, entry.size, self.now)
-                    ne.refcount = entry.refcount
-                    ne.flag = entry.flag
+                msg = MigrateChunk(fp, src.chunk_store[fp], snap)
+                try:
+                    self.transport.send(have[0], t, msg, self.now)
+                except (MessageDropped, NodeDown):
+                    continue
                 restored += 1
         return restored
 

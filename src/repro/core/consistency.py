@@ -35,16 +35,31 @@ class ConsistencyManager:
     queue: list[PendingFlip] = field(default_factory=list)
     flips_applied: int = 0
     flips_lost_to_crash: int = 0
+    flips_coalesced: int = 0       # duplicate due-flips merged per drain pass
 
     def register(self, fp: Fingerprint, now: int, txn_id: int) -> None:
-        self.queue.append(PendingFlip(fp, now + self.async_delay, txn_id))
+        self.register_many((fp,), now, txn_id)
+
+    def register_many(self, fps, now: int, txn_id: int) -> None:
+        """Register one transaction's worth of writes in a single call —
+        a batched unicast registers its whole op list at once instead of
+        queueing flips one by one."""
+        due = now + self.async_delay
+        self.queue.extend(PendingFlip(fp, due, txn_id) for fp in fps)
 
     def drain(self, shard: DMShard, now: int) -> int:
-        """Apply all due flips. Returns number applied."""
+        """Apply all due flips, coalesced into one shard pass: duplicate
+        fingerprints registered by several writes flip once. Returns the
+        number of flips applied."""
         due = [p for p in self.queue if p.due <= now]
         self.queue = [p for p in self.queue if p.due > now]
+        seen: set[Fingerprint] = set()
         n = 0
         for p in due:
+            if p.fp in seen:
+                self.flips_coalesced += 1
+                continue
+            seen.add(p.fp)
             e = shard.cit_lookup(p.fp)
             if e is None:
                 continue  # entry GCed/removed before the flip landed

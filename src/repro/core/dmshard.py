@@ -37,6 +37,22 @@ class CITEntry:
     def is_valid(self) -> bool:
         return self.flag == VALID
 
+    def snapshot(self) -> "CITEntry":
+        """Detached copy, safe to put on the wire (rebalance/scrub)."""
+        return CITEntry(self.refcount, self.flag, self.size, self.invalid_since)
+
+    def clone_into(self, shard: "DMShard", fp: Fingerprint, now: int) -> "CITEntry | None":
+        """Copy this entry into ``shard`` under ``fp`` unless one already
+        exists there. The single place CIT entries are duplicated across
+        nodes (chunk migration, stray-tombstone moves, scrub repair)."""
+        if shard.cit_lookup(fp) is not None:
+            return None
+        e = shard.cit_insert(fp, self.size, now)
+        e.refcount = self.refcount
+        e.flag = self.flag
+        e.invalid_since = self.invalid_since
+        return e
+
 
 @dataclass
 class OMAPEntry:

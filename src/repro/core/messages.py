@@ -1,0 +1,205 @@
+"""Typed wire messages between shared-nothing storage nodes.
+
+Every cluster interaction — chunk writes, OMAP operations, refcount
+releases, reads, rebalance moves — is a message sent through
+``repro.core.transport.Transport``. Each message computes its own wire
+footprint so payload + control accounting lives in one place instead of
+being hand-maintained at every call site:
+
+    wire_bytes(dst, response) = CONTROL_MSG_BYTES            (header/ack)
+                              + payload_bytes(dst, response) (request data)
+                              + response_payload_bytes(response)
+
+Accounting conventions (all preserved from the pre-transport model so the
+benchmark trajectories stay comparable):
+
+* chunk payload is free when the op *originates* on the destination — the
+  primary already holds those bytes (``ChunkOp.origin``);
+* with ``fp_first`` (beyond-paper probe-before-send), chunk bytes only
+  travel for ops that were not dedup hits, which is knowable only after
+  delivery — hence ``payload_bytes`` takes the response;
+* OMAP commit records are control-only; *migrating* a stored OMAP entry
+  during rebalance ships a CONTROL_MSG_BYTES-sized record (``migrate=True``);
+* ``lookups()`` counts the CIT fingerprint lookups a message carries —
+  the unicast-vs-broadcast currency of the paper's Fig 2 argument.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.dmshard import CITEntry, OMAPEntry
+from repro.core.fingerprint import Fingerprint
+
+CONTROL_MSG_BYTES = 64  # modeled size of a lookup/ack/refcount message header
+
+
+class Message:
+    """Base for all wire messages. Subclasses are frozen dataclasses."""
+
+    TYPE: str = "message"
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        """Request payload crossing the wire toward ``dst``."""
+        return 0
+
+    def response_payload_bytes(self, response) -> int:
+        """Response payload crossing the wire back to the sender."""
+        return 0
+
+    def lookups(self) -> int:
+        """CIT fingerprint lookups carried by this message."""
+        return 0
+
+    def wire_bytes(self, dst: str, response=None) -> int:
+        return (
+            CONTROL_MSG_BYTES
+            + self.payload_bytes(dst, response)
+            + self.response_payload_bytes(response)
+        )
+
+
+@dataclass(frozen=True)
+class ChunkOp:
+    """One fingerprint-routed chunk operation inside a ChunkOpBatch.
+
+    ``data is None`` is a *ref-only* op: the sender knows the bytes already
+    exist on the destination (intra-batch duplicate or reference write) and
+    asks only for a refcount increment — nothing but the fingerprint travels.
+    ``origin`` is the OSS that produced the op (the object's primary): ops
+    delivered to their own origin cost no network payload.
+    """
+
+    fp: Fingerprint
+    data: bytes | None = None
+    origin: str = "client"
+
+
+@dataclass(frozen=True)
+class ChunkOpBatch(Message):
+    """One unicast carrying many chunk ops — possibly for many objects
+    (cross-object coalescing: ``write_objects`` emits one of these per
+    target node for the whole batch). Ops apply in order; the response is
+    the per-op outcome list ('dedup_hit'|'repaired'|'restored'|'stored'|
+    'miss')."""
+
+    TYPE = "chunk_op_batch"
+    ops: tuple[ChunkOp, ...] = ()
+    txn: int = 0
+    fp_first: bool = False  # beyond-paper: 64B probe first, bytes on miss only
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        total = 0
+        outcomes = response if response is not None else [None] * len(self.ops)
+        for op, outcome in zip(self.ops, outcomes):
+            if op.data is None or op.origin == dst:
+                continue
+            if self.fp_first and outcome == "dedup_hit":
+                continue  # probe hit: bytes never traveled
+            total += len(op.data)
+        return total
+
+    def lookups(self) -> int:
+        return len(self.ops)
+
+
+@dataclass(frozen=True)
+class OmapPut(Message):
+    """Object-name-routed OMAP record write. A transaction commit record is
+    modeled as control-only; ``migrate=True`` (rebalance) ships the stored
+    entry as a CONTROL_MSG_BYTES record, as in the pre-transport model."""
+
+    TYPE = "omap_put"
+    entry: OMAPEntry = None  # type: ignore[assignment]
+    migrate: bool = False
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        return CONTROL_MSG_BYTES if self.migrate else 0
+
+
+@dataclass(frozen=True)
+class OmapGet(Message):
+    TYPE = "omap_get"
+    name: str = ""
+
+
+@dataclass(frozen=True)
+class OmapDelete(Message):
+    TYPE = "omap_delete"
+    name: str = ""
+
+
+@dataclass(frozen=True)
+class DecrefBatch(Message):
+    """Batched refcount release (delete / transaction rollback): one unicast
+    releasing many references on one node."""
+
+    TYPE = "decref_batch"
+    fps: tuple[Fingerprint, ...] = ()
+
+
+@dataclass(frozen=True)
+class RefOnlyWrite(Message):
+    """Reference-only write: increment refcounts for ``fps`` without moving
+    data (checkpointer device-fp fast path). Each fp is a CIT lookup; the
+    response is a per-fp 'ok'|'miss' tuple ('miss' = entry absent or
+    invalid with no local bytes — the caller falls back to a full write)."""
+
+    TYPE = "ref_only_write"
+    fps: tuple[Fingerprint, ...] = ()
+
+    def lookups(self) -> int:
+        return len(self.fps)
+
+
+@dataclass(frozen=True)
+class ChunkRead(Message):
+    """Fingerprint-routed chunk fetch; the chunk bytes come back in the
+    response."""
+
+    TYPE = "chunk_read"
+    fp: Fingerprint = None  # type: ignore[assignment]
+
+    def response_payload_bytes(self, response) -> int:
+        return len(response) if isinstance(response, (bytes, bytearray)) else 0
+
+
+@dataclass(frozen=True)
+class MigrateChunk(Message):
+    """Rebalance/scrub move: chunk bytes (``data``; None when the
+    destination already holds them) plus the CIT entry snapshot that travels
+    with its chunk — the paper's 'metadata moves with content' property."""
+
+    TYPE = "migrate_chunk"
+    fp: Fingerprint = None  # type: ignore[assignment]
+    data: bytes | None = None
+    cit: CITEntry | None = None
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        return len(self.data) if self.data is not None else 0
+
+
+@dataclass(frozen=True)
+class RawPut(Message):
+    """Baseline-only store: raw bytes placed under a fingerprint with no
+    CIT transaction (central-dedup data push, no-dedup object store)."""
+
+    TYPE = "raw_put"
+    fp: Fingerprint = None  # type: ignore[assignment]
+    data: bytes = b""
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        return len(self.data)
+
+
+MESSAGE_TYPES = (
+    ChunkOpBatch,
+    OmapPut,
+    OmapGet,
+    OmapDelete,
+    DecrefBatch,
+    RefOnlyWrite,
+    ChunkRead,
+    MigrateChunk,
+    RawPut,
+)

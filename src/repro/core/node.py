@@ -12,9 +12,27 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.consistency import ConsistencyManager
-from repro.core.dmshard import DMShard, INVALID, VALID, CITEntry
+from repro.core.dmshard import DMShard, INVALID, VALID, CITEntry, OMAPEntry
 from repro.core.fingerprint import Fingerprint, sha256_fp
 from repro.core.gc import GarbageCollector
+from repro.core.messages import (
+    ChunkOp,
+    ChunkOpBatch,
+    ChunkRead,
+    DecrefBatch,
+    Message,
+    MigrateChunk,
+    OmapDelete,
+    OmapGet,
+    OmapPut,
+    RawPut,
+    RefOnlyWrite,
+)
+
+
+# Sink for ref-only ops, which never register async flips (they either ride
+# an existing valid entry or repair one whose bytes are already present).
+_NO_REGISTER: list = []
 
 
 @dataclass
@@ -51,34 +69,92 @@ class StorageNode:
         if not self.alive:
             raise NodeDown(self.node_id)
 
+    # ----------------------------------------------------------- message I/O
+    def handle(self, msg: Message, now: int):
+        """Single entry point for every wire message (see messages.py).
+        The transport delivers here; ``now`` is the receive timestamp (a
+        delayed message arrives with a later one)."""
+        self._require_alive()
+        if isinstance(msg, ChunkOpBatch):
+            return self._handle_chunk_ops(msg.ops, now, msg.txn)
+        if isinstance(msg, OmapGet):
+            return self.shard.omap_get(msg.name)
+        if isinstance(msg, OmapPut):
+            e = msg.entry
+            self.shard.omap_put(OMAPEntry(e.name, e.object_fp, list(e.chunk_fps), e.size))
+            return True
+        if isinstance(msg, OmapDelete):
+            return self.shard.omap_delete(msg.name)
+        if isinstance(msg, DecrefBatch):
+            self.decref_chunks(list(msg.fps), now)
+            return True
+        if isinstance(msg, RefOnlyWrite):
+            return tuple(self._apply_ref_only(fp, now) for fp in msg.fps)
+        if isinstance(msg, ChunkRead):
+            return self.read_chunk(msg.fp, now)
+        if isinstance(msg, MigrateChunk):
+            return self._apply_migrate(msg, now)
+        if isinstance(msg, RawPut):
+            # Unconditional store: baselines key RawPut by *name* hash too
+            # (NoDedup), where a rewrite must replace the old bytes.
+            self._disk_write(msg.fp, msg.data)
+            return True
+        raise TypeError(f"unhandled message type {type(msg).__name__}")
+
     # ------------------------------------------------------------- chunk I/O
     def receive_chunk(self, fp: Fingerprint, data: bytes, now: int, txn_id: int) -> str:
         """Fingerprint-routed chunk write (paper fig 2, OSS 4). Returns one of
         'dedup_hit' | 'repaired' | 'restored' | 'stored'."""
         self._require_alive()
-        return self._apply_receive(fp, data, self.shard.cit_lookup(fp), now, txn_id)
+        return self._handle_chunk_ops((ChunkOp(fp, data),), now, txn_id)[0]
 
     def receive_chunks(
         self, ops: list[tuple[Fingerprint, bytes]], now: int, txn_id: int
     ) -> list[str]:
         """Batched fingerprint-routed write: one unicast carrying many chunk
-        ops. The CIT lookups are batched; per-op state transitions are exactly
-        those of ``receive_chunk`` applied in order (a duplicate fingerprint
-        later in the batch sees the entry its earlier twin created)."""
+        ops (legacy tuple API; the wire form is a ``ChunkOpBatch``)."""
         self._require_alive()
-        entries = self.shard.cit_lookup_many([fp for fp, _ in ops])
+        return self._handle_chunk_ops(
+            tuple(ChunkOp(fp, data) for fp, data in ops), now, txn_id
+        )
+
+    def _handle_chunk_ops(
+        self, ops: tuple[ChunkOp, ...], now: int, txn_id: int
+    ) -> list[str]:
+        """Apply one unicast's chunk ops in order. The CIT lookups are
+        batched, and all async flag-flip registrations from the batch go to
+        the consistency manager in one ``register_many`` call. Per-op state
+        transitions are exactly those of ``receive_chunk`` applied in order
+        (a duplicate fingerprint later in the batch sees the entry its
+        earlier twin created)."""
+        entries = self.shard.cit_lookup_many([op.fp for op in ops])
         out: list[str] = []
+        register: list[Fingerprint] = []
         seen: set[Fingerprint] = set()
-        for (fp, data), entry in zip(ops, entries):
-            if fp in seen:
-                entry = self.shard.cit_lookup(fp)
-            seen.add(fp)
-            out.append(self._apply_receive(fp, data, entry, now, txn_id))
+        for op, entry in zip(ops, entries):
+            if op.fp in seen:
+                entry = self.shard.cit_lookup(op.fp)
+            seen.add(op.fp)
+            if op.data is None:
+                out.append(self._apply_ref_only(op.fp, now, entry))
+            else:
+                out.append(self._apply_receive(op.fp, op.data, entry, now, register))
+        if register:
+            self.cm.register_many(register, now, txn_id)
         return out
 
     def _apply_receive(
-        self, fp: Fingerprint, data: bytes, entry: CITEntry | None, now: int, txn_id: int
+        self,
+        fp: Fingerprint,
+        data: bytes | None,
+        entry: CITEntry | None,
+        now: int,
+        register: list[Fingerprint],
     ) -> str:
+        """One chunk op's state transition. ``data is None`` is a ref-only
+        op: where a payload op would store bytes, it returns 'miss' instead
+        (entry absent, or invalid with no local bytes to back a repair) and
+        the sender falls back to shipping the chunk."""
         self.stats.cit_lookups += 1
 
         if entry is not None and entry.is_valid():
@@ -94,19 +170,40 @@ class StorageNode:
                 self.shard.cit_addref(fp)
                 self.stats.repairs += 1
                 return "repaired"
+            if data is None:
+                return "miss"
             # Bytes missing: store content first, then flip (async).
             self._disk_write(fp, data)
             self.shard.cit_addref(fp)
-            self.cm.register(fp, now, txn_id)
+            register.append(fp)
             self.stats.repairs += 1
             return "restored"
 
+        if data is None:
+            return "miss"
         # Unique chunk: store with INVALID flag; flip is async (paper §2.4).
         self.shard.cit_insert(fp, len(data), now)
         self._disk_write(fp, data)
         self.shard.cit_addref(fp)
-        self.cm.register(fp, now, txn_id)
+        register.append(fp)
         return "stored"
+
+    def _apply_ref_only(
+        self, fp: Fingerprint, now: int, entry: CITEntry | None = None
+    ) -> str:
+        if entry is None:
+            entry = self.shard.cit_lookup(fp)
+        return self._apply_receive(fp, None, entry, now, _NO_REGISTER)
+
+    def _apply_migrate(self, msg: MigrateChunk, now: int) -> str:
+        """Rebalance/scrub: adopt chunk bytes and the CIT entry traveling
+        with them (content placement — metadata needs no location rewrite)."""
+        if msg.data is not None and msg.fp not in self.chunk_store:
+            self.chunk_store[msg.fp] = msg.data
+            self.stats.disk_bytes_written += len(msg.data)
+        if msg.cit is not None:
+            msg.cit.clone_into(self.shard, msg.fp, now)
+        return "ok"
 
     def read_chunk(self, fp: Fingerprint, now: int) -> bytes:
         self._require_alive()

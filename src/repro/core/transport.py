@@ -1,0 +1,194 @@
+"""Explicit message-passing transport for the shared-nothing cluster.
+
+The paper's claims — no central metadata bottleneck, fingerprint-routed
+unicasts instead of broadcasts, flag-based asynchronous consistency — are
+statements about *messages between nodes*. This module makes those messages
+first-class: every cluster interaction goes through ``Transport.send``,
+which owns
+
+* delivery (dispatch to the destination's ``handle(msg, recv_time)``),
+* per-edge and per-type byte/message accounting (``EdgeStats``), and
+* the message-level fault surface: pluggable delivery policies
+  (``reliable`` / ``drop`` / ``delay`` / ``partition``) plus a hook that
+  feeds the cluster's fault injector a ``transport_send`` event point.
+
+Legacy ``ClusterStats`` fields (net_bytes / control_msgs / lookup_unicasts)
+are views over the transport's totals — no call site hand-maintains
+counters anymore.
+
+Failure semantics (deterministic, simulation-friendly):
+
+* **drop** raises ``MessageDropped`` at the sender — the message never
+  reached the destination; senders treat it like an unreachable node
+  (rollback / replica fallback / garbage for GC).
+* **delay** delivers immediately in simulation order but time-shifts the
+  *receive timestamp* by the configured ticks. Everything the destination
+  stamps with its receive time shifts with it — most visibly the async
+  commit-flag flips, which become due later, so a read racing a delayed
+  write exercises the paper's repair-on-read consistency check.
+* **partition** drops every message between nodes in different groups
+  (the external client reaches all nodes).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Mapping
+
+from repro.core.messages import CONTROL_MSG_BYTES, Message
+
+# policy(src, dst, msg, now) -> ("deliver", 0) | ("delay", ticks) | ("drop", 0)
+DeliveryPolicy = Callable[[str, str, Message, int], tuple[str, int]]
+
+
+class MessageDropped(RuntimeError):
+    def __init__(self, src: str, dst: str, msg: Message):
+        super().__init__(f"{msg.TYPE} {src}->{dst} dropped")
+        self.src, self.dst, self.msg = src, dst, msg
+
+
+# --------------------------------------------------------------- policies
+def reliable() -> DeliveryPolicy:
+    """Every message is delivered immediately (the default)."""
+
+    def policy(src, dst, msg, now):
+        return ("deliver", 0)
+
+    return policy
+
+
+def drop(p: float, seed: int = 0, only: tuple | None = None) -> DeliveryPolicy:
+    """Drop each matching message with probability ``p`` (seeded, so runs
+    are reproducible). ``only`` restricts dropping to the given message
+    classes — e.g. ``only=(ChunkOpBatch,)`` to lose write batches while
+    control traffic survives."""
+    rng = random.Random(seed)
+
+    def policy(src, dst, msg, now):
+        if only is not None and not isinstance(msg, only):
+            return ("deliver", 0)
+        if rng.random() < p:
+            return ("drop", 0)
+        return ("deliver", 0)
+
+    return policy
+
+
+def delay(ticks: int, only: tuple | None = None) -> DeliveryPolicy:
+    """Deliver matching messages with their receive timestamp shifted
+    ``ticks`` into the future (in-flight latency). Commit-flag flips
+    registered by a delayed write become due later, widening the INVALID
+    window the tagged-consistency design tolerates."""
+
+    def policy(src, dst, msg, now):
+        if only is not None and not isinstance(msg, only):
+            return ("deliver", 0)
+        return ("delay", ticks)
+
+    return policy
+
+
+def partition(*groups: tuple[str, ...]) -> DeliveryPolicy:
+    """Network partition: messages between nodes in different groups are
+    dropped. Nodes not named in any group, and the external "client", can
+    reach everyone."""
+    member: dict[str, int] = {}
+    for gi, g in enumerate(groups):
+        for nid in g:
+            member[nid] = gi
+
+    def policy(src, dst, msg, now):
+        gs, gd = member.get(src), member.get(dst)
+        if gs is not None and gd is not None and gs != gd:
+            return ("drop", 0)
+        return ("deliver", 0)
+
+    return policy
+
+
+# -------------------------------------------------------------- accounting
+@dataclass
+class EdgeStats:
+    msgs: int = 0
+    wire_bytes: int = 0
+    payload_bytes: int = 0
+    dropped: int = 0
+    delayed: int = 0
+
+
+@dataclass
+class Transport:
+    """Message delivery + accounting between cluster participants.
+
+    ``handlers`` maps participant id -> object with ``.handle(msg, now)``
+    (and optionally ``.alive``). The cluster passes its live ``nodes`` dict,
+    so topology changes are visible without re-registration.
+    """
+
+    handlers: Mapping[str, object] = field(default_factory=dict)
+    policy: DeliveryPolicy = field(default_factory=reliable)
+    # optional cluster fault hook: (event, ctx_dict) -> None
+    fault_hook: Callable[[str, dict], None] | None = None
+
+    edges: dict[tuple[str, str], EdgeStats] = field(default_factory=dict)
+    msgs_by_type: dict[str, int] = field(default_factory=dict)
+    messages_sent: int = 0          # legacy view: ClusterStats.control_msgs
+    net_bytes: int = 0              # legacy view: payload bytes on the wire
+    wire_bytes: int = 0             # payload + CONTROL_MSG_BYTES headers
+    lookup_unicasts: int = 0        # CIT lookups carried (always unicast)
+    lookup_broadcasts: int = 0      # never incremented — the paper's point
+    dropped: int = 0
+    delayed: int = 0
+
+    def edge(self, src: str, dst: str) -> EdgeStats:
+        e = self.edges.get((src, dst))
+        if e is None:
+            e = self.edges[(src, dst)] = EdgeStats()
+        return e
+
+    def send(self, src: str, dst: str, msg: Message, now: int):
+        """Deliver ``msg`` to ``dst`` and return the handler's response.
+
+        Raises ``MessageDropped`` when the delivery policy loses the
+        message, or whatever the destination handler raises (``NodeDown``,
+        ``ChunkMissing``, ...). Accounting: the message send is counted
+        unconditionally; payload bytes only on successful delivery.
+        """
+        edge = self.edge(src, dst)
+        edge.msgs += 1
+        self.messages_sent += 1
+        self.msgs_by_type[msg.TYPE] = self.msgs_by_type.get(msg.TYPE, 0) + 1
+        self.lookup_unicasts += msg.lookups()
+        if self.fault_hook is not None:
+            self.fault_hook(
+                "transport_send", {"src": src, "dst": dst, "type": msg.TYPE}
+            )
+        action, ticks = self.policy(src, dst, msg, now)
+        if action == "drop":
+            edge.dropped += 1
+            self.dropped += 1
+            raise MessageDropped(src, dst, msg)
+        recv_time = now + (ticks if action == "delay" else 0)
+        if action == "delay":
+            edge.delayed += 1
+            self.delayed += 1
+        handler = self.handlers[dst]
+        response = handler.handle(msg, recv_time)
+        payload = msg.payload_bytes(dst, response) + msg.response_payload_bytes(response)
+        edge.payload_bytes += payload
+        edge.wire_bytes += CONTROL_MSG_BYTES + payload
+        self.wire_bytes += CONTROL_MSG_BYTES + payload
+        self.net_bytes += payload
+        return response
+
+    def client_transfer(self, dst: str, nbytes: int) -> None:
+        """Object-ingress accounting: the client ships object bytes to a
+        primary OSS. Modeled as pure data transfer (no control message),
+        exactly as in the pre-transport accounting; delivery policies do
+        not apply to the external client's ingress path."""
+        edge = self.edge("client", dst)
+        edge.payload_bytes += nbytes
+        edge.wire_bytes += nbytes
+        self.wire_bytes += nbytes
+        self.net_bytes += nbytes

@@ -112,6 +112,44 @@ def test_cdc_mask_targets_chunk_size():
     assert cdc_mask(256) == (1 << 8) - 1
 
 
+# ------------------------------------------------- scalar-mask fast path ----
+def test_mask_window_truncation_levels():
+    from repro.core.chunking import _WINDOW, _mask_window
+
+    assert _mask_window((1 << 1) - 1) == 1
+    assert _mask_window((1 << 8) - 1) == 8
+    assert _mask_window((1 << 11) - 1) == 16   # next pow2 >= 11
+    assert _mask_window((1 << 16) - 1) == 16
+    assert _mask_window((1 << 17) - 1) == _WINDOW   # too wide: full window
+    assert _mask_window(0b1010) == _WINDOW          # non-scalar mask: full
+
+
+@pytest.mark.parametrize("log2_target", [6, 8, 11, 14, 16, 17])
+def test_truncated_scan_candidates_match_full_hashes(log2_target):
+    """The fused tiled scan may stop the doubling scheme once the window
+    covers every masked bit; candidates must equal the full-window ones."""
+    from repro.core.chunking import _cdc_candidates
+
+    mask = (1 << log2_target) - 1
+    for n in [0, 100, 65535, 65537, 200000]:
+        data = RNG.bytes(n)
+        full = np.flatnonzero((window_hashes(data) & np.uint32(mask)) == 0)
+        np.testing.assert_array_equal(_cdc_candidates(data, mask), full)
+
+
+def test_small_mask_boundaries_equal_scalar_oracle():
+    """End-to-end boundary equality vs chunk_cdc_scalar for small targets
+    (the fast-path masks): bit-identical chunking."""
+    for target in (128, 2048, 16 * 1024):
+        spec = ChunkingSpec("cdc", target)
+        for n in (0, 1, 5000, 70000):
+            data = RNG.bytes(n)
+            assert list(chunk_cdc(data, spec)) == list(chunk_cdc_scalar(data, spec)), (
+                target,
+                n,
+            )
+
+
 @pytest.mark.slow
 def test_vectorized_boundaries_equal_scalar_big():
     data = RNG.bytes(1 << 20)
