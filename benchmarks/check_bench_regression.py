@@ -1,0 +1,100 @@
+"""Bench regression gate: compare the DETERMINISTIC columns of a fresh
+``BENCH_write_path.json`` against a committed baseline.
+
+Message counts (control_msgs_*), byte counts (net_bytes_*), chunk counts
+and the dedup ratio are exact functions of the workload and the wire
+model — any drift is a real message-shape or accounting change and fails
+the job with tolerance 0. Wall-clock columns (*_mb_s, *_objects_s,
+speedup*) are explicitly IGNORED: CI boxes are ±20% noisy (see
+CHANGES.md), so they carry no gate signal.
+
+Usage:
+    python benchmarks/check_bench_regression.py FRESH.json BASELINE.json
+
+Exit 0 when every deterministic column matches, 1 otherwise (with a
+per-column diff). When the message shape changes INTENTIONALLY, regenerate
+the baseline (``write_path_bench.py --quick --out
+benchmarks/bench_baseline_quick.json``) in the same PR and say why.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# (section, column) pairs that must match exactly. Everything else in the
+# report is either derived from these or wall-clock noise.
+DETERMINISTIC_COLUMNS = [
+    ("cdc", "n_chunks"),
+    ("cdc", "buf_mib"),
+    ("fingerprint", "n_chunks"),
+    ("fingerprint", "buf_mib"),
+    ("write_path", "n_objects"),
+    ("write_path", "obj_kib"),
+    ("write_path", "dedup_ratio"),
+    ("write_path", "control_msgs_serial"),
+    ("write_path", "control_msgs_batched"),
+    ("write_path", "control_msgs_coalesced"),
+    ("write_path", "chunk_msgs_serial"),
+    ("write_path", "chunk_msgs_batched"),
+    ("write_path", "chunk_msgs_coalesced"),
+    ("write_path", "net_bytes_batched"),
+    ("write_path", "net_bytes_coalesced"),
+    ("write_path", "ack_bytes_coalesced"),
+    ("write_path", "retransmits_coalesced"),
+]
+
+
+def compare(fresh: dict, baseline: dict) -> list[str]:
+    problems: list[str] = []
+    if fresh.get("quick") != baseline.get("quick"):
+        problems.append(
+            f"mode mismatch: fresh quick={fresh.get('quick')} vs "
+            f"baseline quick={baseline.get('quick')} — gate only compares "
+            f"like-for-like runs"
+        )
+        return problems
+    for section, column in DETERMINISTIC_COLUMNS:
+        f_sec, b_sec = fresh.get(section), baseline.get(section)
+        if f_sec is None or b_sec is None:
+            problems.append(f"missing section {section!r} "
+                            f"(fresh={f_sec is not None}, baseline={b_sec is not None})")
+            continue
+        f_val, b_val = f_sec.get(column), b_sec.get(column)
+        if f_val != b_val:
+            problems.append(
+                f"{section}.{column}: fresh={f_val!r} != baseline={b_val!r}"
+            )
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", type=Path, help="freshly produced BENCH_write_path.json")
+    ap.add_argument("baseline", type=Path, help="committed baseline json")
+    args = ap.parse_args()
+
+    fresh = json.loads(args.fresh.read_text())
+    baseline = json.loads(args.baseline.read_text())
+    problems = compare(fresh, baseline)
+    if problems:
+        print("BENCH REGRESSION: deterministic columns drifted (tolerance 0):")
+        for p in problems:
+            print(f"  - {p}")
+        print(
+            "\nWall-clock columns are ignored by design. If this drift is an\n"
+            "intentional message-shape/accounting change, regenerate the\n"
+            "baseline in this PR:\n"
+            f"  PYTHONPATH=src python benchmarks/write_path_bench.py --quick "
+            f"--out {args.baseline}"
+        )
+        return 1
+    checked = ", ".join(f"{s}.{c}" for s, c in DETERMINISTIC_COLUMNS)
+    print(f"bench gate OK — deterministic columns match exactly ({checked})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

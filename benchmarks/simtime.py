@@ -28,7 +28,13 @@ DEFAULT = Testbed()
 
 
 def modeled_time_clusterwide(cluster, tb: Testbed = DEFAULT, extra_serial_s: float = 0.0) -> float:
-    """Bottleneck time for a DedupCluster workload (distributed everything)."""
+    """Bottleneck time for a DedupCluster workload (distributed everything).
+
+    ``net_bytes`` already includes the per-delivery ack bytes of the
+    at-least-once transport; retransmissions chasing lost messages/acks add
+    metadata ops, and the simulated ticks senders spent waiting on ack
+    timeouts are a serial cost (nothing overlaps a sender stalled on a
+    retry loop). Under a reliable policy both terms are zero."""
     n = max(1, len(cluster.nodes))
     t_net = cluster.stats.net_bytes / (n * tb.net_Bps_per_node)
     t_disk = max(
@@ -37,9 +43,11 @@ def modeled_time_clusterwide(cluster, tb: Testbed = DEFAULT, extra_serial_s: flo
     )
     # chunking+fingerprinting happens on every primary OSS in parallel
     t_cpu = cluster.stats.logical_bytes_written / (n * tb.fp_Bps_per_node)
-    ops = cluster.stats.control_msgs + cluster.stats.lookup_unicasts
+    retransmits = getattr(cluster.stats, "retransmits", 0)
+    ops = cluster.stats.control_msgs + cluster.stats.lookup_unicasts + retransmits
     t_meta = ops * tb.meta_op_s / n
-    return max(t_net, t_disk, t_cpu, t_meta) + extra_serial_s + tb.client_overhead_s
+    t_retry = getattr(cluster.stats, "timeout_ticks_waited", 0) * tb.flag_io_s
+    return max(t_net, t_disk, t_cpu, t_meta) + t_retry + extra_serial_s + tb.client_overhead_s
 
 
 def modeled_time_central(cluster, tb: Testbed = DEFAULT, n_clients: int = 8) -> float:

@@ -130,8 +130,14 @@ def bench_write_path(n_objects: int, obj_bytes: int) -> dict:
         "control_msgs_serial": cs.stats.control_msgs,
         "control_msgs_batched": cb.stats.control_msgs,
         "control_msgs_coalesced": cc.stats.control_msgs,
+        "chunk_msgs_serial": cs.transport.msgs_by_type.get("chunk_op_batch", 0),
+        "chunk_msgs_batched": cb.transport.msgs_by_type.get("chunk_op_batch", 0),
+        "chunk_msgs_coalesced": cc.transport.msgs_by_type.get("chunk_op_batch", 0),
         "net_bytes_batched": cb.stats.net_bytes,
         "net_bytes_coalesced": cc.stats.net_bytes,
+        # at-least-once accounting: every delivery acked; reliable run -> 0 retries
+        "ack_bytes_coalesced": cc.stats.ack_bytes,
+        "retransmits_coalesced": cc.stats.retransmits,
     }
 
 

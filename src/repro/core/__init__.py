@@ -18,9 +18,11 @@ from repro.core.baselines import (
     CentralDedupCluster,
     DiskLocalDedupCluster,
     NoDedupCluster,
+    UnsupportedTransportPolicy,
 )
 from repro.core.dmshard import CITEntry, DMShard, INVALID, OMAPEntry, VALID
 from repro.core.messages import (
+    ACK_MSG_BYTES,
     CONTROL_MSG_BYTES,
     ChunkOp,
     ChunkOpBatch,
@@ -33,14 +35,21 @@ from repro.core.messages import (
     OmapPut,
     RawPut,
     RefOnlyWrite,
+    TxnCancel,
 )
 from repro.core.transport import (
+    Envelope,
     MessageDropped,
+    SeenWindow,
     Transport,
+    ack_loss,
+    chaos,
     delay,
     drop,
+    duplicate,
     partition,
     reliable,
+    reorder,
 )
 from repro.core.fingerprint import (
     Fingerprint,
@@ -61,6 +70,7 @@ __all__ = [
     "CentralDedupCluster",
     "DiskLocalDedupCluster",
     "NoDedupCluster",
+    "UnsupportedTransportPolicy",
     "ReadError",
     "TransactionAbort",
     "WriteError",
@@ -77,6 +87,7 @@ __all__ = [
     "ClusterMap",
     "place",
     "primary",
+    "ACK_MSG_BYTES",
     "CONTROL_MSG_BYTES",
     "Message",
     "ChunkOp",
@@ -89,10 +100,17 @@ __all__ = [
     "OmapPut",
     "RawPut",
     "RefOnlyWrite",
+    "TxnCancel",
     "Transport",
+    "Envelope",
+    "SeenWindow",
     "MessageDropped",
     "reliable",
     "drop",
     "delay",
     "partition",
+    "duplicate",
+    "reorder",
+    "ack_loss",
+    "chaos",
 ]

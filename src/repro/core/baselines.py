@@ -17,9 +17,14 @@ deliberately NOT network traffic — it is the serialized bottleneck the
 ``central_ops`` counter models for fig5a.
 
 The baselines model the *happy path* only: they use the default reliable
-delivery policy and have no rollback/accounting for lost messages. The
-message-failure surface (drop/delay/partition) is a DedupCluster feature;
-attaching a lossy policy to a baseline's transport is unsupported.
+delivery policy and have no rollback/accounting for lost, delayed,
+duplicated, or reordered messages. The message-failure surface
+(drop/delay/partition/duplicate/reorder/ack_loss/chaos) and the
+at-least-once retry machinery are DedupCluster features; constructing a
+baseline over a non-reliable transport raises
+``UnsupportedTransportPolicy`` instead of silently producing wrong stats
+(every write path re-checks, so a policy swapped in after construction is
+caught too).
 """
 
 from __future__ import annotations
@@ -40,15 +45,45 @@ __all__ = [
     "DiskLocalDedupCluster",
     "NoDedupCluster",
     "ReadError",
+    "UnsupportedTransportPolicy",
     "WriteError",
 ]
 
 
+class UnsupportedTransportPolicy(RuntimeError):
+    """A baseline was given a non-reliable delivery policy. Baselines model
+    the happy path only — running them over a lossy transport would not
+    fail loudly, it would quietly produce WRONG stats (no rollback, no
+    retries, no idempotent receive paths). Use DedupCluster for any
+    fault-injection study."""
+
+    def __init__(self, cluster_kind: str, policy) -> None:
+        kind = getattr(policy, "kind", None) or getattr(policy, "__name__", repr(policy))
+        super().__init__(
+            f"{cluster_kind} models reliable delivery only; delivery policy "
+            f"{kind!r} is unsupported (drop/delay/partition/duplicate/reorder/"
+            f"ack_loss/chaos and custom policies are DedupCluster features)"
+        )
+
+
+def _require_reliable(cluster) -> None:
+    """Reject any policy not tagged as the built-in ``reliable()`` — a
+    custom callable cannot be proven lossless, so it is rejected too."""
+    policy = cluster.transport.policy
+    if getattr(policy, "kind", None) != "reliable" or getattr(policy, "lossy", True):
+        raise UnsupportedTransportPolicy(type(cluster).__name__, policy)
+    if cluster.transport.retry_budget:
+        raise UnsupportedTransportPolicy(type(cluster).__name__, policy)
+
+
 def _init_transport_stats(cluster) -> None:
     """Shared lazy wiring for the baseline dataclasses: a Transport over the
-    live nodes dict and the legacy stats facade on top of it."""
+    live nodes dict and the legacy stats facade on top of it. Rejects
+    non-reliable transports up front — and the write/read paths re-check,
+    catching a lossy policy swapped in after construction."""
     if cluster.transport is None:
         cluster.transport = Transport(handlers=cluster.nodes)
+    _require_reliable(cluster)
     if cluster.stats is None:
         cluster.stats = ClusterStats(cluster.transport)
 
@@ -81,6 +116,7 @@ class CentralDedupCluster:
         return c
 
     def write_object(self, name: str, data: bytes) -> Fingerprint:
+        _require_reliable(self)
         self.stats.logical_bytes_written += len(data)
         # client -> central server (everything funnels through it)
         self.transport.client_transfer("central", len(data))
@@ -105,6 +141,7 @@ class CentralDedupCluster:
         return self.central_omap[name].object_fp
 
     def read_object(self, name: str) -> bytes:
+        _require_reliable(self)
         self.central_ops += 1
         e = self.central_omap.get(name)
         if e is None:
@@ -150,6 +187,7 @@ class DiskLocalDedupCluster:
         return c
 
     def write_object(self, name: str, data: bytes) -> Fingerprint:
+        _require_reliable(self)
         self.stats.logical_bytes_written += len(data)
         nid = place(name_fp(name), self.cmap, 1)[0]   # object placed by name
         node = self.nodes[nid]
@@ -169,6 +207,7 @@ class DiskLocalDedupCluster:
         return object_fp(fps)
 
     def read_object(self, name: str) -> bytes:
+        _require_reliable(self)
         nid = place(name_fp(name), self.cmap, 1)[0]
         node = self.nodes[nid]
         e = node.shard.omap_get(name)
@@ -208,6 +247,7 @@ class NoDedupCluster:
         return c
 
     def write_object(self, name: str, data: bytes) -> None:
+        _require_reliable(self)
         self.stats.logical_bytes_written += len(data)
         nid = place(name_fp(name), self.cmap, 1)[0]
         # whole object travels client -> node as one raw store
@@ -215,6 +255,7 @@ class NoDedupCluster:
         self.stats.writes_ok += 1
 
     def read_object(self, name: str) -> bytes:
+        _require_reliable(self)
         nid = place(name_fp(name), self.cmap, 1)[0]
         data = self.nodes[nid].chunk_store.get(name_fp(name))
         if data is None:

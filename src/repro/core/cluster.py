@@ -60,6 +60,7 @@ from repro.core.messages import (
     OmapGet,
     OmapPut,
     RefOnlyWrite,
+    TxnCancel,
 )
 from repro.core.node import ChunkMissing, NodeDown, StorageNode
 from repro.core.placement import ClusterMap, place
@@ -114,6 +115,39 @@ class ClusterStats:
     def lookup_broadcasts(self) -> int:
         return self._transport.lookup_broadcasts  # always 0 — the paper's point
 
+    # --- at-least-once delivery counters (transport views) -----------------
+    @property
+    def retransmits(self) -> int:
+        """Wire-level re-sends chasing lost messages/acks (not counted in
+        ``control_msgs``, which stays the logical message count)."""
+        return self._transport.retransmits
+
+    @property
+    def acks(self) -> int:
+        """Delivery acks sent back to senders (one per handler delivery,
+        including duplicate/late copies)."""
+        return self._transport.acks_sent
+
+    @property
+    def ack_bytes(self) -> int:
+        """Wire bytes spent on acks — included in ``net_bytes``."""
+        return self._transport.ack_bytes
+
+    @property
+    def msgs_dropped(self) -> int:
+        return self._transport.dropped
+
+    @property
+    def duplicate_deliveries(self) -> int:
+        """Extra copies that reached a handler (duplicate/reorder faults);
+        the receivers' seen-windows made them state no-ops."""
+        return self._transport.late_deliveries
+
+    @property
+    def timeout_ticks_waited(self) -> int:
+        """Simulated ticks senders spent waiting on acks that never came."""
+        return self._transport.timeout_ticks_waited
+
     def __repr__(self) -> str:  # debugging convenience
         return (
             f"ClusterStats(logical={self.logical_bytes_written}, "
@@ -140,12 +174,28 @@ class DedupCluster:
     # Cross-object unicast coalescing: one ChunkOpBatch per node for a whole
     # write_objects() batch (False reproduces the per-object message shape).
     coalesce_batches: bool = True
+    # At-least-once delivery: retransmissions chasing a lost message/ack
+    # (0 = legacy fire-and-forget) and the simulated-ticks ack timeout per
+    # attempt. Applied to the transport, where the retry loop lives.
+    retry_budget: int = 0
+    ack_timeout: int = 2
     _txn_counter: int = 0
 
     def __post_init__(self) -> None:
-        if self.transport is None:
+        created = self.transport is None
+        if created:
             self.transport = Transport(handlers=self.nodes)
         self.transport.fault_hook = self._transport_fault
+        # Retry configuration: the cluster fields drive a transport we
+        # created; an injected transport keeps its own settings unless the
+        # caller ALSO passed non-default cluster values (which win). Either
+        # way the cluster fields end up mirroring the transport's truth.
+        if created or self.retry_budget:
+            self.transport.retry_budget = self.retry_budget
+        if created or self.ack_timeout != DedupCluster.ack_timeout:
+            self.transport.ack_timeout = self.ack_timeout
+        self.retry_budget = self.transport.retry_budget
+        self.ack_timeout = self.transport.ack_timeout
         if self.stats is None:
             self.stats = ClusterStats(self.transport)
 
@@ -178,9 +228,11 @@ class DedupCluster:
         self.nodes[nid].restart()
 
     def tick(self, dt: int = 1) -> None:
-        """Advance simulated time; drain async consistency queues."""
+        """Advance simulated time; land in-flight (duplicated/reordered)
+        message copies, then drain async consistency queues."""
         for _ in range(dt):
             self.now += 1
+            self.transport.advance(self.now)
             for n in self.nodes.values():
                 n.tick(self.now)
 
@@ -391,10 +443,19 @@ class DedupCluster:
             )
             try:
                 outcomes = self.transport.send("client", t, msg, self.now)
-            except (MessageDropped, NodeDown, TransactionAbort):
-                # Lost/aborted before delivery: nothing acked on this node;
-                # the commit phase fails (and rolls back) any object that
-                # ends up with an unacked chunk.
+            except MessageDropped as e:
+                # Nothing acked on this node — but the ops may have applied
+                # ("ack lost"): a conditional cancel settles it receiver-side
+                # before the commit phase fails any object with an unacked
+                # chunk.
+                self._cancel_unconfirmed(
+                    "client", t, e, fps=tuple(op.fp for op in ops)
+                )
+                continue
+            except (NodeDown, TransactionAbort):
+                # Aborted before delivery: nothing applied on this node; the
+                # commit phase fails (and rolls back) any object that ends
+                # up with an unacked chunk.
                 continue
             for (pi, i), outcome in zip(node_refs[t], outcomes):
                 if outcome != "miss":
@@ -437,13 +498,7 @@ class DedupCluster:
                     raise NodeDown(primary)
                 ofp = object_fp(plan["fps"])
                 entry = OMAPEntry(name, ofp, list(plan["fps"]), len(plan["data"]))
-                wrote = False
-                for t in self._live(self.omap_targets(name)):
-                    try:
-                        self.transport.send(primary, t, OmapPut(entry), self.now)
-                        wrote = True
-                    except MessageDropped:
-                        pass
+                wrote = self._commit_omap(primary, name, entry)
                 if not wrote:
                     raise WriteError(f"no live OMAP target for {name!r} at commit")
             except (NodeDown, TransactionAbort, WriteError) as e:
@@ -466,6 +521,53 @@ class DedupCluster:
         if planning_failure is not None:
             raise planning_failure[0]
         return results
+
+    def _commit_omap(self, src: str, name: str, entry: OMAPEntry) -> bool:
+        """Write the commit record to every live OMAP replica; True when at
+        least one replica acked (the transaction commits). When NO replica
+        acks, any maybe-applied put is conditionally cancelled receiver-side
+        so a failed transaction cannot leave a committed-looking entry
+        behind — and because the OmapPut is idempotent and cancels are
+        conditional, a RETRIED commit neither double-applies nor rolls back
+        a replica that did commit: a replica that applied the first put
+        simply re-acks it from its seen-window."""
+        wrote = False
+        unconfirmed: list[tuple[str, MessageDropped]] = []
+        for t in self._live(self.omap_targets(name)):
+            try:
+                self.transport.send(src, t, OmapPut(entry), self.now)
+                wrote = True
+            except MessageDropped as e:
+                unconfirmed.append((t, e))
+        if not wrote:
+            for t, e in unconfirmed:
+                self._cancel_unconfirmed(src, t, e, omap_name=name)
+        return wrote
+
+    def _cancel_unconfirmed(
+        self,
+        src: str,
+        dst: str,
+        exc: MessageDropped,
+        fps: tuple = (),
+        omap_name: str | None = None,
+    ) -> None:
+        """Resolve the at-least-once ambiguity after a send exhausted its
+        retry budget: when ``maybe_applied`` the op may have landed without
+        its ack, so a blind rollback would either miss applied refs
+        ("ack lost, op applied") or double-release ("op lost"). The
+        conditional ``TxnCancel`` decides AT the receiver: compensate if
+        the message id is in its seen-window, otherwise poison the id so a
+        copy still in flight is discarded. Best-effort — a cancel that is
+        itself lost leaves at worst the legacy unreachable-node garbage."""
+        if not exc.maybe_applied:
+            return  # no attempt reached the receiver: nothing ever applied
+        try:
+            self.transport.send(
+                src, dst, TxnCancel(exc.msg_id, tuple(fps), omap_name), self.now
+            )
+        except (MessageDropped, NodeDown):
+            pass
 
     def _rollback_refs(self, src: str, acked: dict, ops) -> None:
         """Release the refcounts one failed wave object took (plan shape)."""
@@ -552,14 +654,7 @@ class DedupCluster:
                 raise NodeDown(primary)
             ofp = object_fp(fps)
             entry = OMAPEntry(name=name, object_fp=ofp, chunk_fps=list(fps), size=len(data))
-            wrote_omap = False
-            for t in self._live(self.omap_targets(name)):
-                try:
-                    self.transport.send(primary, t, OmapPut(entry), self.now)
-                    wrote_omap = True
-                except MessageDropped:
-                    pass
-            if not wrote_omap:
+            if not self._commit_omap(primary, name, entry):
                 raise WriteError(f"no live OMAP target for {name!r} at commit")
         except (NodeDown, TransactionAbort, WriteError) as e:
             # Failed object transaction: best-effort rollback of the
@@ -602,8 +697,11 @@ class DedupCluster:
             )
             try:
                 outcomes = self.transport.send(primary, t, msg, self.now)
-            except MessageDropped:
-                continue  # this node's ops are lost; ack check below decides
+            except MessageDropped as e:
+                # Unacked: settle "applied without ack?" receiver-side; the
+                # ack check below decides the transaction's fate.
+                self._cancel_unconfirmed(primary, t, e, fps=tuple(fps[i] for i in idxs))
+                continue
             for i, outcome in zip(idxs, outcomes):
                 if outcome != "miss":
                     acked_on[i].append(t)
@@ -631,7 +729,8 @@ class DedupCluster:
             )
             try:
                 outcomes = self.transport.send(primary, t, msg, self.now)
-            except MessageDropped:
+            except MessageDropped as e:
+                self._cancel_unconfirmed(primary, t, e, fps=(fp,))
                 continue
             if outcomes[0] != "miss":
                 written_on.append(t)
@@ -657,7 +756,10 @@ class DedupCluster:
                 results = self.transport.send(
                     "client", t, RefOnlyWrite(tuple(fps)), self.now
                 )
-            except (MessageDropped, NodeDown):
+            except MessageDropped as e:
+                self._cancel_unconfirmed("client", t, e, fps=tuple(fps))
+                continue
+            except NodeDown:
                 continue
             for fp, res in zip(fps, results):
                 if res != "miss":
@@ -673,14 +775,7 @@ class DedupCluster:
             _undo()
             return None
         entry = OMAPEntry(name, src.object_fp, list(src.chunk_fps), src.size)
-        wrote = False
-        for t in self._live(self.omap_targets(name)):
-            try:
-                self.transport.send("client", t, OmapPut(entry), self.now)
-                wrote = True
-            except MessageDropped:
-                pass
-        if not wrote:
+        if not self._commit_omap("client", name, entry):
             _undo()
             return None
         self.stats.writes_ok += 1

@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 
 from repro.core.dmshard import DMShard, VALID
 from repro.core.fingerprint import Fingerprint
+from repro.core.transport import BoundedIdSet
 
 
 @dataclass(frozen=True)
@@ -36,14 +37,31 @@ class ConsistencyManager:
     flips_applied: int = 0
     flips_lost_to_crash: int = 0
     flips_coalesced: int = 0       # duplicate due-flips merged per drain pass
+    flips_deduped: int = 0         # registrations refused: message id already seen
+    # At-least-once guard: message ids whose flips were already registered.
+    # The node's seen-window suppresses duplicate deliveries before they
+    # reach us; this bounded window is the flip queue's own belt-and-braces
+    # (ids are cheap, so it can outlive the node window). Volatile like the
+    # queue itself — after a crash both the flips and the guard are gone,
+    # which is exactly the window the tagged-consistency design tolerates.
+    _seen_msg_ids: "BoundedIdSet" = field(
+        default_factory=lambda: BoundedIdSet(capacity=4096)
+    )
 
     def register(self, fp: Fingerprint, now: int, txn_id: int) -> None:
         self.register_many((fp,), now, txn_id)
 
-    def register_many(self, fps, now: int, txn_id: int) -> None:
+    def register_many(self, fps, now: int, txn_id: int, msg_id: int | None = None) -> None:
         """Register one transaction's worth of writes in a single call —
         a batched unicast registers its whole op list at once instead of
-        queueing flips one by one."""
+        queueing flips one by one. A ``msg_id`` that was already registered
+        (retransmitted/duplicated unicast) is a no-op: the flips for that
+        delivery are queued at most once."""
+        if msg_id is not None:
+            if msg_id in self._seen_msg_ids:
+                self.flips_deduped += 1
+                return
+            self._seen_msg_ids.add(msg_id)
         due = now + self.async_delay
         self.queue.extend(PendingFlip(fp, due, txn_id) for fp in fps)
 
@@ -77,6 +95,7 @@ class ConsistencyManager:
     def crash(self) -> None:
         self.flips_lost_to_crash += len(self.queue)
         self.queue.clear()
+        self._seen_msg_ids.clear()
 
     def pending(self) -> int:
         return len(self.queue)

@@ -31,7 +31,8 @@ from dataclasses import dataclass
 from repro.core.dmshard import CITEntry, OMAPEntry
 from repro.core.fingerprint import Fingerprint
 
-CONTROL_MSG_BYTES = 64  # modeled size of a lookup/ack/refcount message header
+CONTROL_MSG_BYTES = 64  # modeled size of a lookup/refcount message header
+ACK_MSG_BYTES = 64      # modeled size of the per-delivery ack on the reverse edge
 
 
 class Message:
@@ -180,6 +181,26 @@ class MigrateChunk(Message):
 
 
 @dataclass(frozen=True)
+class TxnCancel(Message):
+    """Conditional compensation for the at-least-once ambiguity window.
+
+    When a sender exhausts its retry budget with ``maybe_applied`` — some
+    attempt reached the receiver but no ack came back — it cannot tell
+    "ack lost, op applied" from "op lost". ``TxnCancel`` resolves it AT the
+    receiver: if ``ref_msg_id`` is in the receiver's seen-window the
+    original message applied, so its effects are compensated (refcounts
+    released per the cached per-op outcomes; the OMAP entry removed when
+    ``omap_name`` is set). If it is NOT seen, the id is poisoned so a copy
+    still in flight is discarded on arrival instead of resurrecting the
+    cancelled transaction. Control-only on the wire."""
+
+    TYPE = "txn_cancel"
+    ref_msg_id: int = 0
+    fps: tuple[Fingerprint, ...] = ()
+    omap_name: str | None = None
+
+
+@dataclass(frozen=True)
 class RawPut(Message):
     """Baseline-only store: raw bytes placed under a fingerprint with no
     CIT transaction (central-dedup data push, no-dedup object store)."""
@@ -201,5 +222,6 @@ MESSAGE_TYPES = (
     RefOnlyWrite,
     ChunkRead,
     MigrateChunk,
+    TxnCancel,
     RawPut,
 )

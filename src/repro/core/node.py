@@ -27,7 +27,9 @@ from repro.core.messages import (
     OmapPut,
     RawPut,
     RefOnlyWrite,
+    TxnCancel,
 )
+from repro.core.transport import BoundedIdSet, Envelope, SeenWindow
 
 
 # Sink for ref-only ops, which never register async flips (they either ride
@@ -44,6 +46,10 @@ class NodeStats:
     cit_lookups: int = 0
     consistency_checks: int = 0
     repairs: int = 0
+    dup_msgs_suppressed: int = 0   # duplicate deliveries answered from the window
+    poisoned_discards: int = 0     # late copies of cancelled messages discarded
+    out_of_order: int = 0          # arrivals with a seq below the edge high-water
+    cancels_applied: int = 0       # TxnCancel compensations that found the op applied
 
 
 @dataclass
@@ -55,6 +61,15 @@ class StorageNode:
     cm: ConsistencyManager = field(default_factory=ConsistencyManager)
     gc: GarbageCollector = field(default_factory=GarbageCollector)
     stats: NodeStats = field(default_factory=NodeStats)
+    # At-least-once receive state. ``seen`` (message id -> first response)
+    # makes every retransmitted/duplicated delivery a state-free re-ack;
+    # ``_poisoned`` holds cancelled ids whose copy may still be in flight.
+    # Both persist across crash like the DM-Shard: delivery dedup metadata
+    # is journaled with the ops it guards (losing it would re-open the
+    # double-apply window for every pre-crash unicast).
+    seen: SeenWindow = field(default_factory=SeenWindow)
+    _poisoned: BoundedIdSet = field(default_factory=BoundedIdSet)
+    _edge_seq_seen: dict[str, int] = field(default_factory=dict)
 
     # ------------------------------------------------------------------ life
     def crash(self) -> None:
@@ -70,13 +85,50 @@ class StorageNode:
             raise NodeDown(self.node_id)
 
     # ----------------------------------------------------------- message I/O
-    def handle(self, msg: Message, now: int):
+    def handle(self, msg: Message, now: int, env: Envelope | None = None):
         """Single entry point for every wire message (see messages.py).
         The transport delivers here; ``now`` is the receive timestamp (a
-        delayed message arrives with a later one)."""
+        delayed message arrives with a later one).
+
+        At-least-once guard: when the delivery carries an ``Envelope``, its
+        message id is checked against the bounded seen-window FIRST — a
+        retransmitted or duplicated copy returns the cached response of the
+        first application without touching any state (CIT refcounts, OMAP,
+        chunk store, pending flips). Copies of a cancelled (poisoned) id
+        are discarded. This is what makes every mutating message type
+        (ChunkOpBatch / RefOnlyWrite / DecrefBatch / OmapPut / OmapDelete /
+        MigrateChunk / TxnCancel) exactly-once at the state layer over an
+        at-least-once wire."""
         self._require_alive()
+        # Reads mutate nothing a duplicate could corrupt (repair-on-read is
+        # idempotent), so they stay OUT of the seen-window: recording them
+        # would let read traffic evict mutating message ids and silently
+        # re-open the double-apply window the bound is sized for.
+        mutating = not isinstance(msg, (ChunkRead, OmapGet))
+        if env is not None:
+            if env.msg_id in self._poisoned:
+                # A late copy of a message the sender already cancelled:
+                # applying it would resurrect a rolled-back transaction.
+                self.stats.poisoned_discards += 1
+                return None
+            last = self._edge_seq_seen.get(env.src, -1)
+            if env.seq < last:
+                self.stats.out_of_order += 1
+            else:
+                self._edge_seq_seen[env.src] = env.seq
+            if mutating:
+                cached = self.seen.get(env.msg_id)
+                if cached is not self.seen.ABSENT:
+                    self.stats.dup_msgs_suppressed += 1
+                    return cached
+        response = self._dispatch(msg, now, env.msg_id if env is not None else None)
+        if env is not None and mutating:
+            self.seen.record(env.msg_id, response)
+        return response
+
+    def _dispatch(self, msg: Message, now: int, msg_id: int | None = None):
         if isinstance(msg, ChunkOpBatch):
-            return self._handle_chunk_ops(msg.ops, now, msg.txn)
+            return self._handle_chunk_ops(msg.ops, now, msg.txn, msg_id)
         if isinstance(msg, OmapGet):
             return self.shard.omap_get(msg.name)
         if isinstance(msg, OmapPut):
@@ -94,6 +146,8 @@ class StorageNode:
             return self.read_chunk(msg.fp, now)
         if isinstance(msg, MigrateChunk):
             return self._apply_migrate(msg, now)
+        if isinstance(msg, TxnCancel):
+            return self._apply_cancel(msg, now)
         if isinstance(msg, RawPut):
             # Unconditional store: baselines key RawPut by *name* hash too
             # (NoDedup), where a rewrite must replace the old bytes.
@@ -119,7 +173,11 @@ class StorageNode:
         )
 
     def _handle_chunk_ops(
-        self, ops: tuple[ChunkOp, ...], now: int, txn_id: int
+        self,
+        ops: tuple[ChunkOp, ...],
+        now: int,
+        txn_id: int,
+        msg_id: int | None = None,
     ) -> list[str]:
         """Apply one unicast's chunk ops in order. The CIT lookups are
         batched, and all async flag-flip registrations from the batch go to
@@ -140,7 +198,7 @@ class StorageNode:
             else:
                 out.append(self._apply_receive(op.fp, op.data, entry, now, register))
         if register:
-            self.cm.register_many(register, now, txn_id)
+            self.cm.register_many(register, now, txn_id, msg_id)
         return out
 
     def _apply_receive(
@@ -194,6 +252,30 @@ class StorageNode:
         if entry is None:
             entry = self.shard.cit_lookup(fp)
         return self._apply_receive(fp, None, entry, now, _NO_REGISTER)
+
+    def _apply_cancel(self, msg: TxnCancel, now: int) -> str:
+        """Resolve the sender's "ack lost, op applied?" ambiguity locally.
+
+        If the referenced message id is in the seen-window, its op DID
+        apply here: compensate — release exactly the refs its cached
+        outcomes granted (a 'miss' took none) and drop the OMAP entry a
+        cancelled commit wrote. If it is absent, the op never applied (or
+        its copy is still in flight): poison the id so a late arrival is
+        discarded instead of resurrecting the cancelled transaction.
+        TxnCancel itself rides the same seen-window, so a retransmitted
+        cancel never double-compensates."""
+        cached = self.seen.get(msg.ref_msg_id)
+        if cached is self.seen.ABSENT:
+            self._poisoned.add(msg.ref_msg_id)
+            return "noop"
+        self.stats.cancels_applied += 1
+        if msg.omap_name is not None:
+            self.shard.omap_delete(msg.omap_name)
+        outcomes = cached if isinstance(cached, (list, tuple)) else []
+        for fp, outcome in zip(msg.fps, outcomes):
+            if outcome != "miss":
+                self.decref_chunk(fp, now)
+        return "cancelled"
 
     def _apply_migrate(self, msg: MigrateChunk, now: int) -> str:
         """Rebalance/scrub: adopt chunk bytes and the CIT entry traveling

@@ -1,0 +1,585 @@
+"""At-least-once transport: message ids, acks, timeout/retransmission, and
+the idempotent receive paths that absorb duplicate and reordered delivery.
+
+Proves the ROADMAP's standing claim — "the CIT's idempotent dedup_hit/repair
+paths should absorb [duplicate-delivery windows] — worth proving with
+tests" — as invariants:
+
+* retransmission masks lost messages AND lost acks; a retransmitted
+  delivery of an applied message is answered from the receiver's bounded
+  seen-window without touching state;
+* ``duplicate`` / ``reorder`` fault policies make the same message arrive
+  twice and out of order; refcounts, OMAP contents, chunk stores and GC
+  results still converge byte-identically to a reliable-transport oracle;
+* when the retry budget runs out the sender distinguishes "op lost"
+  (``maybe_applied=False`` — nothing to undo) from "ack lost, op applied?"
+  (``maybe_applied=True`` — settled receiver-side by a conditional
+  ``TxnCancel`` that compensates if the op applied and poisons the message
+  id if a copy is still in flight);
+* retried commits neither double-increment refcounts nor re-roll-back a
+  committed object.
+
+The chaos convergence test is seeded and parametrized; run more schedules
+with ``CHAOS_SCHEDULES=150 pytest tests/test_at_least_once.py -k chaos``
+and reproduce a nightly failure locally with ``CHAOS_SEED_BASE=<seed>
+CHAOS_SCHEDULES=1`` (the failing parametrization id IS the seed).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkOpBatch,
+    ChunkingSpec,
+    DecrefBatch,
+    DedupCluster,
+    MessageDropped,
+    OmapPut,
+    SeenWindow,
+    Transport,
+    UnsupportedTransportPolicy,
+    WriteError,
+    ack_loss,
+    chaos,
+    drop,
+    duplicate,
+    reliable,
+    reorder,
+    sha256_fp,
+)
+
+CH = ChunkingSpec("fixed", 1024)
+
+
+def pytest_generate_tests(metafunc):
+    """Chaos schedules are seeded: the fast path runs a fixed small set,
+    the nightly job widens it via CHAOS_SCHEDULES / CHAOS_SEED_BASE. A
+    failing test id names the seed to reproduce with."""
+    if "chaos_seed" in metafunc.fixturenames:
+        base = int(os.environ.get("CHAOS_SEED_BASE", "0"))
+        n = int(os.environ.get("CHAOS_SCHEDULES", "20"))
+        metafunc.parametrize("chaos_seed", range(base, base + n))
+
+
+# ----------------------------------------------------------------- helpers
+def cluster_state(c, with_store: bool = True):
+    """Comparable snapshot: CIT (refcount, flag, size), OMAP layouts, and
+    optionally the stored chunk bytes, per node."""
+    state = {}
+    for nid, n in c.nodes.items():
+        cit = {fp: (e.refcount, e.flag, e.size) for fp, e in n.shard.cit.items()}
+        omap = {
+            name: (e.object_fp, tuple(e.chunk_fps), e.size)
+            for name, e in n.shard.omap.items()
+        }
+        store = dict(n.chunk_store) if with_store else None
+        state[nid] = (cit, omap, store)
+    return state
+
+
+def settle(c, ticks: int = 40, gc_rounds: int = 3):
+    """Land in-flight copies, drain flips, and run GC to a fixed point."""
+    c.tick(ticks)
+    for _ in range(gc_rounds):
+        c.run_gc()
+        c.tick(c.nodes[next(iter(c.nodes))].gc.threshold + 1)
+    c.run_gc()
+
+
+def total_refs(c):
+    return sum(e.refcount for n in c.nodes.values() for e in n.shard.cit.values())
+
+
+# ------------------------------------------------- envelope/ack wire model
+def test_every_delivery_is_acked_on_the_reverse_edge():
+    c = DedupCluster.create(3, chunking=CH)
+    data = np.random.default_rng(0).bytes(4096)
+    c.write_object("a", data)
+    t = c.transport
+    assert t.acks_sent == t.deliveries == t.messages_sent
+    assert t.ack_bytes == 64 * t.acks_sent
+    # acks appear in EdgeStats on the reverse of each data edge
+    for (src, dst), e in t.edges.items():
+        if e.msgs:
+            rev = t.edges.get((dst, src))
+            assert rev is not None and rev.acks >= e.msgs
+    # and they are part of net_bytes (visible through ClusterStats)
+    assert c.stats.ack_bytes == t.ack_bytes
+    assert c.stats.net_bytes > c.stats.logical_bytes_written
+
+
+def test_out_of_order_arrival_is_counted():
+    """A duplicated copy of message N lands after message N+1 on the same
+    edge: its sequence number is below the receiver's high-water mark, the
+    arrival is counted out-of-order, and the seen-window suppresses it."""
+    from repro.core import OmapDelete
+    from repro.core.node import StorageNode
+
+    node = StorageNode("oss0")
+    t = Transport(handlers={"oss0": node}, policy=duplicate(1.0))
+    t.send("client", "oss0", OmapDelete("a"), 0)  # dup copy of seq 0 held
+    t.send("client", "oss0", OmapDelete("b"), 0)  # seq 1 delivers, then flushes seq 0
+    t.advance(5)
+    assert node.stats.out_of_order >= 1
+    assert node.stats.dup_msgs_suppressed >= 1
+    assert t.late_deliveries >= 1
+
+
+def test_reads_stay_out_of_the_seen_window():
+    """ChunkRead/OmapGet are not recorded: read traffic must not evict
+    mutating message ids from the bounded window (a duplicate read is
+    harmless to re-serve; a duplicate ref increment is not)."""
+    c = DedupCluster.create(2, chunking=CH)
+    for node in c.nodes.values():
+        node.seen.capacity = 4
+    data = np.random.default_rng(30).bytes(2048)
+    c.write_object("x", data)
+    filled = {nid: len(n.seen) for nid, n in c.nodes.items()}
+    for _ in range(50):  # heavy read traffic through the transport
+        assert c.read_object("x") == data
+    for nid, n in c.nodes.items():
+        assert len(n.seen) == filled[nid], "reads must not consume window slots"
+
+
+def test_sequence_numbers_are_per_edge_monotonic():
+    c = DedupCluster.create(3, chunking=CH)
+    c.write_object("a", np.random.default_rng(1).bytes(4096))
+    for (_, _), e in c.transport.edges.items():
+        assert e.next_seq >= 0
+    # receiver-side high-water marks match what each edge sent
+    for nid, node in c.nodes.items():
+        for src, hi in node._edge_seq_seen.items():
+            assert hi == c.transport.edges[(src, nid)].next_seq - 1
+
+
+# ------------------------------------------------------- retransmission
+def test_retry_budget_masks_drops_and_counts_retransmits():
+    oracle = DedupCluster.create(4, replicas=2, chunking=CH)
+    c = DedupCluster.create(
+        4, replicas=2, chunking=CH, policy=drop(0.4, seed=11), retry_budget=8
+    )
+    rng = np.random.default_rng(2)
+    items = [(f"o{i}", rng.bytes(4096)) for i in range(6)]
+    oracle.write_objects(list(items))
+    c.write_objects(list(items))
+    assert c.stats.retransmits > 0
+    assert c.stats.msgs_dropped > 0
+    assert c.stats.timeout_ticks_waited == c.stats.retransmits * c.ack_timeout
+    # logical message count is NOT inflated by retries
+    assert c.stats.control_msgs == oracle.stats.control_msgs
+    settle(oracle), settle(c)
+    assert cluster_state(c) == cluster_state(oracle)
+    for n, d in items:
+        assert c.read_object(n) == d
+
+
+def test_retransmitted_write_registers_flips_at_the_later_receive_time():
+    """A write whose first attempts were dropped lands ack_timeout*k ticks
+    later — its async commit flips become due later too, exactly like a
+    delayed message."""
+    c = DedupCluster.create(
+        3,
+        chunking=CH,
+        policy=drop(1.0, seed=0, only=(ChunkOpBatch,)),
+        retry_budget=3,
+        ack_timeout=5,
+    )
+    # all 4 attempts drop -> WriteError; now allow the LAST attempt through
+    attempts = {"n": 0}
+
+    def drop_first_three(src, dst, msg, now):
+        if isinstance(msg, ChunkOpBatch):
+            attempts["n"] += 1
+            if attempts["n"] % 4 != 0:
+                return ("drop", 0)
+        return ("deliver", 0)
+
+    c.transport.policy = drop_first_three
+    data = np.random.default_rng(3).bytes(2048)  # 2 chunks
+    c.write_object("x", data)
+    assert c.stats.retransmits >= 3
+    c.tick(2)  # enough for an undelayed write's flips
+    invalid = sum(len(n.shard.invalid_fps()) for n in c.nodes.values())
+    assert invalid > 0, "flips must still be pending behind the retry delay"
+    c.tick(20)
+    assert sum(len(n.shard.invalid_fps()) for n in c.nodes.values()) == 0
+    assert c.read_object("x") == data
+
+
+def test_exhausted_retry_budget_raises_and_rolls_back():
+    c = DedupCluster.create(
+        3, chunking=CH, policy=drop(1.0, only=(ChunkOpBatch,)), retry_budget=2
+    )
+    with pytest.raises(WriteError):
+        c.write_object("x", np.random.default_rng(4).bytes(4096))
+    assert c.stats.writes_failed == 1
+    n_batches = c.transport.msgs_by_type["chunk_op_batch"]
+    assert c.stats.retransmits == 2 * n_batches
+    # every attempt of an exhausted send waits out its ack timeout,
+    # including the final one: (budget + 1) timeouts per lost send
+    assert c.stats.timeout_ticks_waited == 3 * n_batches * c.ack_timeout
+    assert total_refs(c) == 0
+    assert all(not n.shard.omap for n in c.nodes.values())
+
+
+# --------------------------------------------- duplicate delivery windows
+def test_duplicate_everything_matches_reliable_oracle():
+    """`duplicate(1.0)`: every unicast arrives twice (the second copy late
+    and out of order). The per-node seen-window answers every duplicate
+    from cache; refcounts, OMAP, chunk stores and GC match the oracle."""
+    rng = np.random.default_rng(5)
+    blob = rng.bytes(4096)
+    items = [(f"o{i}", rng.bytes(4096)) for i in range(6)] + [
+        ("dupA", blob),
+        ("dupB", blob),  # intra-batch duplicate content -> ref-only ops
+    ]
+    oracle = DedupCluster.create(4, replicas=2, chunking=CH)
+    c = DedupCluster.create(
+        4, replicas=2, chunking=CH, policy=duplicate(1.0, seed=6), retry_budget=2
+    )
+    oracle.write_objects(list(items))
+    c.write_objects(list(items))
+    # the duplicate copies really were delivered, and really were suppressed
+    assert c.transport.late_deliveries > 0
+    suppressed = sum(n.stats.dup_msgs_suppressed for n in c.nodes.values())
+    assert suppressed > 0
+    # delete + ref-write + rebalance under continued duplication
+    for cc in (oracle, c):
+        cc.delete_object("o0")
+        assert cc.write_object_by_ref("ref", "o1") is not None
+        cc.add_node()
+        cc.scrub()
+    settle(oracle), settle(c)
+    assert cluster_state(c) == cluster_state(oracle)
+    for n, d in items[1:]:
+        assert c.read_object(n) == d
+    assert c.read_object("ref") == c.read_object("o1")
+
+
+def test_duplicated_decref_cannot_double_release():
+    """DecrefBatch applied twice would corrupt refcounts (or assert on a
+    negative count). The seen-window makes the duplicate a no-op."""
+    c = DedupCluster.create(
+        3, chunking=CH, policy=duplicate(1.0, only=(DecrefBatch,)), retry_budget=1
+    )
+    blob = np.random.default_rng(7).bytes(1024)
+    c.write_object("a", blob)
+    c.write_object("b", blob)  # refcount 2 on the shared chunk
+    c.tick(3)
+    c.delete_object("a")
+    c.tick(3)  # flushes the duplicate DecrefBatch copy
+    refs = [e.refcount for n in c.nodes.values() for e in n.shard.cit.values()]
+    assert refs == [1], f"duplicate decref must not double-release: {refs}"
+    assert c.read_object("b") == blob
+
+
+def test_duplicated_commit_does_not_double_release_replaced_version():
+    """Rewriting a name releases the previous version's refs exactly once,
+    even when every OmapPut (the commit record) is delivered twice."""
+    c = DedupCluster.create(
+        3, chunking=CH, policy=duplicate(1.0, only=(OmapPut,)), retry_budget=1
+    )
+    rng = np.random.default_rng(8)
+    v1, v2 = rng.bytes(2048), rng.bytes(2048)
+    c.write_object("x", v1)
+    c.tick(3)
+    refs_v1 = total_refs(c)
+    c.write_object("x", v2)  # replace: releases v1 refs once at commit
+    settle(c)
+    assert c.read_object("x") == v2
+    # v1 chunks fully released (flag-0, then GCed); v2 holds the only refs
+    assert total_refs(c) == refs_v1
+    assert all(e.refcount == 1 for n in c.nodes.values() for e in n.shard.cit.values())
+
+
+# -------------------------------------------------------------- reordering
+def test_reorder_held_original_lands_as_stale_duplicate():
+    """`reorder` holds the original back; the sender times out and
+    retransmits. The retransmission applies; the late original is a stale
+    duplicate the seen-window suppresses."""
+    oracle = DedupCluster.create(3, chunking=CH)
+    c = DedupCluster.create(
+        3, chunking=CH, policy=reorder(0.3, seed=9), retry_budget=8
+    )
+    rng = np.random.default_rng(9)
+    items = [(f"r{i}", rng.bytes(4096)) for i in range(6)]
+    oracle.write_objects(list(items))
+    c.write_objects(list(items))
+    assert c.transport.reordered > 0
+    assert c.stats.retransmits > 0
+    assert c.transport.late_deliveries > 0
+    settle(oracle), settle(c)
+    assert cluster_state(c) == cluster_state(oracle)
+
+
+def test_reorder_without_budget_poisons_the_inflight_copy():
+    """Budget 0: the sender gives up on a held (in-flight) message and
+    cancels it. The cancel poisons the message id, so when the held copy
+    finally lands it is DISCARDED — the cancelled transaction cannot
+    resurrect."""
+    c = DedupCluster.create(
+        3, chunking=CH, policy=reorder(1.0, only=(ChunkOpBatch,)), retry_budget=0
+    )
+    with pytest.raises(WriteError):
+        c.write_object("x", np.random.default_rng(10).bytes(4096))
+    c.transport.policy = reliable()
+    c.tick(5)  # lands every held copy -> poisoned -> discarded
+    discarded = sum(n.stats.poisoned_discards for n in c.nodes.values())
+    assert discarded > 0
+    assert total_refs(c) == 0
+    assert all(not n.chunk_store for n in c.nodes.values()), (
+        "a poisoned chunk batch must not store bytes"
+    )
+    assert all(not n.shard.omap for n in c.nodes.values())
+    # and a clean retry works
+    data = np.random.default_rng(10).bytes(4096)
+    c.write_object("x", data)
+    assert c.read_object("x") == data
+
+
+# --------------------------------------- "ack lost" vs "op lost" ambiguity
+def test_ack_loss_with_budget_applies_exactly_once():
+    """Lost acks are indistinguishable from lost messages at the sender;
+    the retransmission is answered from the seen-window, so state mutates
+    exactly once per message id."""
+    oracle = DedupCluster.create(3, chunking=CH)
+    c = DedupCluster.create(
+        3, chunking=CH, policy=ack_loss(0.5, seed=12), retry_budget=6
+    )
+    rng = np.random.default_rng(12)
+    items = [(f"a{i}", rng.bytes(4096)) for i in range(6)]
+    oracle.write_objects(list(items))
+    c.write_objects(list(items))
+    assert c.transport.acks_dropped > 0
+    assert c.stats.retransmits > 0
+    suppressed = sum(n.stats.dup_msgs_suppressed for n in c.nodes.values())
+    assert suppressed > 0, "retransmits of applied messages answered from cache"
+    settle(oracle), settle(c)
+    assert cluster_state(c) == cluster_state(oracle)
+
+
+def test_op_applied_but_unacked_is_cancelled_not_leaked():
+    """Budget 0 + total ack loss on chunk batches: the op APPLIED but the
+    sender cannot know ("maybe_applied"). The conditional TxnCancel finds
+    the id in the receiver's seen-window and compensates the refs — without
+    it the applied refs would leak forever (refcount>0, no OMAP entry, so
+    GC could never reclaim the bytes once the flip lands)."""
+    c = DedupCluster.create(
+        3, chunking=CH, policy=ack_loss(1.0, only=(ChunkOpBatch,)), retry_budget=0
+    )
+    with pytest.raises(WriteError):
+        c.write_object("x", np.random.default_rng(13).bytes(4096))
+    # the ops really applied (bytes hit disks) ...
+    assert sum(n.stats.chunk_writes for n in c.nodes.values()) > 0
+    cancels = sum(n.stats.cancels_applied for n in c.nodes.values())
+    assert cancels > 0
+    # ... and the cancel released every ref they took
+    assert total_refs(c) == 0
+    c.transport.policy = reliable()
+    settle(c)
+    assert all(not n.chunk_store for n in c.nodes.values()), (
+        "cancelled refs age into garbage and GC reclaims the bytes"
+    )
+
+
+def test_op_lost_sends_no_cancel():
+    """A pure drop (maybe_applied=False) needs no compensation — nothing
+    reached the receiver, so no TxnCancel message is spent on it."""
+    c = DedupCluster.create(
+        3, chunking=CH, policy=drop(1.0, only=(ChunkOpBatch,)), retry_budget=1
+    )
+    with pytest.raises(WriteError):
+        c.write_object("x", np.random.default_rng(14).bytes(4096))
+    assert c.transport.msgs_by_type.get("txn_cancel", 0) == 0
+    assert total_refs(c) == 0
+
+
+def test_unacked_commit_record_is_cancelled_conditionally():
+    """All OmapPut acks lost with no budget: the commit may or may not have
+    applied. The cancel removes a committed-looking entry (and the poison
+    blocks an in-flight one), so a failed write NEVER leaves a readable
+    object behind — while the chunk refs are rolled back."""
+    c = DedupCluster.create(
+        3, chunking=CH, policy=ack_loss(1.0, only=(OmapPut,)), retry_budget=0
+    )
+    with pytest.raises(WriteError):
+        c.write_object("x", np.random.default_rng(15).bytes(4096))
+    c.transport.policy = reliable()
+    assert all(not n.shard.omap for n in c.nodes.values()), (
+        "maybe-applied commit record must be compensated away"
+    )
+    assert total_refs(c) == 0
+    settle(c)
+    assert all(not n.chunk_store for n in c.nodes.values())
+
+
+def test_retried_commit_is_idempotent():
+    """OmapPut ack lost, budget covers it: the retransmission re-acks from
+    the seen-window. The commit applies once — the replaced version's refs
+    are released exactly once, nothing double-increments, and the object
+    stays committed (no spurious rollback)."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH, retry_budget=4)
+    rng = np.random.default_rng(16)
+    v1, v2 = rng.bytes(2048), rng.bytes(2048)
+    c.write_object("x", v1)
+    c.tick(3)
+    c.transport.policy = ack_loss(0.6, seed=16, only=(OmapPut,))
+    c.write_object("x", v2)  # replace under lossy commit acks
+    c.transport.policy = reliable()
+    settle(c)
+    assert c.read_object("x") == v2
+    assert all(
+        e.refcount == 1 for n in c.nodes.values() for e in n.shard.cit.values()
+    ), "replace must release v1 refs exactly once and take v2 refs exactly once"
+
+
+# ------------------------------------------------------------ seen window
+def test_seen_window_is_bounded():
+    w = SeenWindow(capacity=8)
+    for i in range(100):
+        w.record(i, f"r{i}")
+    assert len(w) == 8
+    assert 99 in w and 92 in w and 91 not in w
+    assert w.get(99) == "r99"
+    assert w.get(0) is w.ABSENT
+
+
+def test_node_seen_window_bounds_memory_under_load():
+    c = DedupCluster.create(2, chunking=CH)
+    for node in c.nodes.values():
+        node.seen.capacity = 16
+    rng = np.random.default_rng(17)
+    c.write_objects([(f"o{i}", rng.bytes(2048)) for i in range(40)])
+    for node in c.nodes.values():
+        assert len(node.seen) <= 16
+
+
+# ------------------------------------------------------- chaos convergence
+def test_chaos_schedule_converges_to_reliable_oracle(chaos_seed):
+    """Acceptance invariant: under a seeded drop+duplicate+reorder+ack-loss
+    schedule with retries enabled, a multi-object write_objects batch (plus
+    delete / ref-write / replace traffic) converges to byte-identical CIT
+    refcounts, OMAP state, chunk stores and GC results as the
+    reliable-transport oracle. A WriteError under chaos is retried at the
+    client (idempotent writes make the retry exact), mirroring real client
+    behavior."""
+    rng = np.random.default_rng(1000 + chaos_seed)
+    pool = [rng.bytes(3072) for _ in range(4)]
+    items = [
+        (f"c{i}", pool[i % len(pool)] + rng.bytes(1024 * (i % 3)))
+        for i in range(10)
+    ]
+
+    oracle = DedupCluster.create(4, replicas=2, chunking=CH)
+    c = DedupCluster.create(
+        4,
+        replicas=2,
+        chunking=CH,
+        policy=chaos(
+            seed=chaos_seed, p_drop=0.12, p_dup=0.15, p_reorder=0.08, p_ack_drop=0.1
+        ),
+        retry_budget=12,
+    )
+
+    def run(cluster):
+        for attempt in range(6):
+            try:
+                cluster.write_objects(list(items))
+                break
+            except WriteError:
+                continue
+        else:
+            raise AssertionError(
+                f"chaos seed {chaos_seed}: batch did not commit in 6 client retries"
+            )
+        cluster.delete_object("c1")
+        for attempt in range(6):
+            if cluster.write_object_by_ref("ref", "c2") is not None:
+                break
+        cluster.write_object("c3", pool[0])  # replace with different content
+
+    run(oracle)
+    run(c)
+    settle(oracle), settle(c)
+    assert cluster_state(c) == cluster_state(oracle), (
+        f"chaos seed {chaos_seed} diverged from the reliable oracle "
+        f"(repro: CHAOS_SEED_BASE={chaos_seed} CHAOS_SCHEDULES=1)"
+    )
+    # GC reachability: another full GC cycle removes nothing on either side
+    before = cluster_state(c)
+    settle(oracle), settle(c)
+    assert cluster_state(c) == before == cluster_state(oracle)
+    for name, data in items:
+        if name == "c1":
+            continue
+        expected = pool[0] if name == "c3" else data
+        assert c.read_object(name) == expected
+
+
+# ------------------------------------------------------- baselines reject
+def test_baselines_reject_lossy_policies():
+    from repro.core import CentralDedupCluster, DiskLocalDedupCluster, NoDedupCluster
+
+    for factory in (
+        lambda: CentralDedupCluster.create(3),
+        lambda: DiskLocalDedupCluster.create(3),
+        lambda: NoDedupCluster.create(3),
+    ):
+        # constructor-time rejection
+        proto = factory()
+        with pytest.raises(UnsupportedTransportPolicy):
+            type(proto)(cmap=proto.cmap, transport=Transport(policy=drop(0.5)))
+        # post-construction swap caught at the next operation
+        for bad in (drop(0.5), duplicate(0.5), reorder(0.5), ack_loss(0.5), chaos()):
+            b = factory()
+            b.transport.policy = bad
+            with pytest.raises(UnsupportedTransportPolicy):
+                b.write_object("x", b"payload")
+        # a retry budget on a baseline transport is equally unsupported
+        b = factory()
+        b.transport.retry_budget = 3
+        with pytest.raises(UnsupportedTransportPolicy):
+            b.write_object("x", b"payload")
+        # untagged custom callables cannot be proven lossless -> rejected
+        b = factory()
+        b.transport.policy = lambda src, dst, msg, now: ("deliver", 0)
+        with pytest.raises(UnsupportedTransportPolicy):
+            b.write_object("x", b"payload")
+    # the reliable default still works everywhere
+    ok = NoDedupCluster.create(3)
+    ok.write_object("x", b"payload")
+    assert ok.read_object("x") == b"payload"
+
+
+def test_dedup_cluster_adopts_new_policies():
+    """The new policies are first-class on DedupCluster.create (adopted,
+    not rejected) — the counterpart of the baselines' explicit rejection."""
+    for pol in (duplicate(0.3, seed=1), reorder(0.3, seed=1), ack_loss(0.3, seed=1),
+                chaos(seed=1)):
+        c = DedupCluster.create(3, chunking=CH, policy=pol, retry_budget=6)
+        data = np.random.default_rng(20).bytes(4096)
+        c.write_object("w", data)
+        c.tick(5)
+        assert c.read_object("w") == data
+
+
+# ----------------------------------------------------------- simtime model
+def test_simtime_charges_retries_and_acks():
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+    from simtime import modeled_time_clusterwide
+
+    rng = np.random.default_rng(21)
+    items = [(f"s{i}", rng.bytes(4096)) for i in range(6)]
+    a = DedupCluster.create(3, chunking=CH)
+    b = DedupCluster.create(3, chunking=CH, policy=drop(0.4, seed=3), retry_budget=8)
+    a.write_objects(list(items))
+    b.write_objects(list(items))
+    assert b.stats.retransmits > 0
+    assert modeled_time_clusterwide(b) > modeled_time_clusterwide(a), (
+        "retransmissions and ack timeouts must cost modeled time"
+    )

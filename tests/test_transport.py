@@ -65,8 +65,11 @@ def test_wire_bytes_identity_and_per_edge_stats():
     c.write_object("a", data)
     assert c.read_object("a") == data
     t = c.transport
-    # every delivered message costs one control header on top of payload
-    assert t.wire_bytes == t.net_bytes + CONTROL_MSG_BYTES * (t.messages_sent - t.dropped)
+    # every delivered message costs one control header on top of payload,
+    # and every delivery is acked (ack bytes are part of net_bytes)
+    assert t.wire_bytes == t.net_bytes + CONTROL_MSG_BYTES * t.deliveries
+    assert t.acks_sent == t.deliveries == t.messages_sent - t.dropped
+    assert t.ack_bytes == t.acks_sent * CONTROL_MSG_BYTES
     # the client ingress edge carries the object bytes
     edges = {k: v for k, v in t.edges.items() if k[0] == "client" and v.payload_bytes}
     assert sum(e.payload_bytes for e in edges.values()) >= len(data)
@@ -97,10 +100,16 @@ def test_stats_parity_with_pre_transport_accounting():
     c.add_node()
     c.scrub()
     c.tick(2)
-    assert c.stats.net_bytes == 127200        # pre-refactor exact
+    # payload parity: net_bytes minus the at-least-once ack bytes is the
+    # pre-refactor exact payload accounting; the ack surcharge is exactly
+    # one ACK_MSG_BYTES (=CONTROL_MSG_BYTES) per delivery.
+    assert c.stats.net_bytes - c.stats.ack_bytes == 127200   # pre-refactor exact
+    assert c.stats.ack_bytes == 64 * c.transport.deliveries
+    assert c.stats.net_bytes == 136672        # 127200 + 64 * 148 deliveries
     assert c.stats.lookup_unicasts == 76      # pre-refactor exact
     assert c.stats.lookup_broadcasts == 0
     assert c.stats.control_msgs == 148        # transport message count
+    assert c.stats.retransmits == 0           # reliable policy: no retries
     assert c.stats.rebalance_bytes_moved == 12079
     assert c.stats.rebalance_chunks_moved == 13
     assert c.unique_bytes_stored() == 27836
@@ -123,7 +132,11 @@ def test_coalesced_batch_one_unicast_per_node():
     # PR 1 measured 261 control messages for this workload; the coalesced
     # transport must be strictly below it
     assert coal.stats.control_msgs < 261
-    assert coal.stats.net_bytes == per_obj.stats.net_bytes == 978944
+    # identical payload bytes; coalescing ALSO saves ack bytes (fewer
+    # messages -> fewer acks), so total net_bytes is strictly lower
+    payload = lambda c: c.stats.net_bytes - c.stats.ack_bytes  # noqa: E731
+    assert payload(coal) == payload(per_obj) == 978944
+    assert coal.stats.net_bytes < per_obj.stats.net_bytes
     assert coal.stats.lookup_unicasts == per_obj.stats.lookup_unicasts == 512
     for nid in coal.nodes:
         assert coal.nodes[nid].chunk_store == per_obj.nodes[nid].chunk_store
