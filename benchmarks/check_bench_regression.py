@@ -44,6 +44,26 @@ DETERMINISTIC_COLUMNS = [
     ("write_path", "net_bytes_coalesced"),
     ("write_path", "ack_bytes_coalesced"),
     ("write_path", "retransmits_coalesced"),
+    # recovery round (split-brain heal): message/byte counts and both
+    # modeled-time link models are exact functions of the seeded schedule;
+    # only recovery_wall_s is noise (and is not listed here)
+    ("recovery", "n_objects"),
+    ("recovery", "writes_failed_during_partition"),
+    ("recovery", "digest_msgs"),
+    ("recovery", "repair_msgs"),
+    ("recovery", "audit_msgs"),
+    ("recovery", "omap_repaired"),
+    ("recovery", "chunks_repaired"),
+    ("recovery", "cit_repaired"),
+    ("recovery", "repair_bytes"),
+    ("recovery", "refs_over"),
+    ("recovery", "refs_under"),
+    ("recovery", "flags_flipped"),
+    ("recovery", "gc_removed"),
+    ("recovery", "recovery_net_bytes"),
+    ("recovery", "recovery_msgs"),
+    ("recovery", "modeled_time_uniform_s"),
+    ("recovery", "modeled_time_per_edge_s"),
 ]
 
 

@@ -27,16 +27,53 @@ class Testbed:
 DEFAULT = Testbed()
 
 
-def modeled_time_clusterwide(cluster, tb: Testbed = DEFAULT, extra_serial_s: float = 0.0) -> float:
+def straggler_nic_seconds(cluster, tb: Testbed = DEFAULT) -> float:
+    """Per-edge network bottleneck: each node's NIC carries the payload of
+    every edge incident to it (full duplex — ingress and egress are
+    independent lanes; the binding lane is the larger). The cluster is as
+    fast as its most loaded NIC, not the average one — a skewed placement
+    or a recovery round hammering one holder shows up here while the
+    uniform n-way split hides it. Uses the transport's per-edge accounting
+    (``EdgeStats.payload_bytes``, ack bytes included on the reverse edge);
+    the external client's NIC is not modeled, matching the uniform model
+    which never charged client-side time either."""
+    ingress: dict[str, int] = {}
+    egress: dict[str, int] = {}
+    for (src, dst), e in cluster.transport.edges.items():
+        egress[src] = egress.get(src, 0) + e.payload_bytes
+        ingress[dst] = ingress.get(dst, 0) + e.payload_bytes
+    worst = 0
+    for nid in cluster.nodes:
+        worst = max(worst, ingress.get(nid, 0), egress.get(nid, 0))
+    return worst / tb.net_Bps_per_node
+
+
+def modeled_time_clusterwide(
+    cluster,
+    tb: Testbed = DEFAULT,
+    extra_serial_s: float = 0.0,
+    link_model: str = "per_edge",
+) -> float:
     """Bottleneck time for a DedupCluster workload (distributed everything).
 
     ``net_bytes`` already includes the per-delivery ack bytes of the
     at-least-once transport; retransmissions chasing lost messages/acks add
     metadata ops, and the simulated ticks senders spent waiting on ack
     timeouts are a serial cost (nothing overlaps a sender stalled on a
-    retry loop). Under a reliable policy both terms are zero."""
+    retry loop). Under a reliable policy both terms are zero.
+
+    ``link_model`` picks the network term: ``"per_edge"`` (default)
+    charges the straggler NIC from the transport's per-edge stats —
+    skewed traffic is bound by its hottest link; ``"uniform"`` keeps the
+    legacy aggregate/n split (every byte assumed perfectly spread over all
+    NICs). Both are pinned in the bench JSON."""
     n = max(1, len(cluster.nodes))
-    t_net = cluster.stats.net_bytes / (n * tb.net_Bps_per_node)
+    if link_model == "uniform":
+        t_net = cluster.stats.net_bytes / (n * tb.net_Bps_per_node)
+    elif link_model == "per_edge":
+        t_net = straggler_nic_seconds(cluster, tb)
+    else:
+        raise ValueError(f"unknown link_model {link_model!r}")
     t_disk = max(
         (nd.stats.disk_bytes_written / tb.disk_Bps_per_node for nd in cluster.nodes.values()),
         default=0.0,

@@ -13,13 +13,24 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import ChunkingSpec, DedupCluster, fingerprint_many
+from repro.core import (
+    ChunkingSpec,
+    DedupCluster,
+    WriteError,
+    fingerprint_many,
+    partition,
+    reliable,
+)
 from repro.core.chunking import chunk_cdc, chunk_cdc_scalar, chunk_object
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from simtime import modeled_time_clusterwide  # noqa: E402
 
 MB = 1024 * 1024
 
@@ -141,6 +152,59 @@ def bench_write_path(n_objects: int, obj_bytes: int) -> dict:
     }
 
 
+def bench_recovery(n_objects: int, obj_bytes: int) -> dict:
+    """Recovery-round cost model on a fixed split-brain schedule: writes
+    across an open partition, heal, client retries, then the full
+    digest-repair + refcount-audit + GC round. Every column except the
+    wall-clock one is a deterministic function of the workload and the
+    wire model — the bench gate holds them at tolerance 0."""
+    rng = np.random.default_rng(11)
+    spec = ChunkingSpec("fixed", 2048)
+    c = DedupCluster.create(6, replicas=2, chunking=spec)
+    c.write_objects([(f"base{i}", rng.bytes(obj_bytes)) for i in range(n_objects)])
+    c.tick(3)
+    c.transport.policy = partition(
+        ("oss0", "oss1", "oss2"), ("oss3", "oss4", "oss5")
+    )
+    items = [(f"w{i}", rng.bytes(obj_bytes)) for i in range(n_objects)]
+    failed = []
+    for name, data in items:
+        try:
+            c.write_object(name, data)
+        except WriteError:
+            failed.append((name, data))
+    c.transport.policy = reliable()
+    for name, data in failed:
+        c.write_object(name, data)
+    net_before, msgs_before = c.stats.net_bytes, c.stats.control_msgs
+    t0 = time.perf_counter()
+    report = c.recover()
+    wall = time.perf_counter() - t0
+    return {
+        "n_objects": n_objects,
+        "obj_kib": obj_bytes / 1024,
+        "writes_failed_during_partition": len(failed),
+        "digest_msgs": c.transport.msgs_by_type.get("digest_request", 0),
+        "repair_msgs": c.transport.msgs_by_type.get("repair_chunk", 0),
+        "audit_msgs": report.audit_msgs,
+        "omap_repaired": report.omap_repaired,
+        "chunks_repaired": report.chunks_repaired,
+        "cit_repaired": report.cit_repaired,
+        "repair_bytes": report.repair_bytes,
+        "refs_over": report.refs_over,
+        "refs_under": report.refs_under,
+        "flags_flipped": report.flags_flipped,
+        "gc_removed": report.gc_removed,
+        "recovery_net_bytes": c.stats.net_bytes - net_before,
+        "recovery_msgs": c.stats.control_msgs - msgs_before,
+        # both link models pinned: the legacy uniform n-way split and the
+        # per-edge straggler-NIC bottleneck (the default)
+        "modeled_time_uniform_s": modeled_time_clusterwide(c, link_model="uniform"),
+        "modeled_time_per_edge_s": modeled_time_clusterwide(c, link_model="per_edge"),
+        "recovery_wall_s": wall,  # noisy; NOT gated
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small inputs (CI smoke)")
@@ -151,16 +215,19 @@ def main() -> None:
         cdc_bytes, scalar_bytes = 1 * MB, 64 * 1024
         fp_bytes = 4 * MB
         n_objects, obj_bytes = 40, 32 * 1024
+        rec_objects, rec_bytes = 16, 8 * 1024
     else:
         cdc_bytes, scalar_bytes = 8 * MB, 256 * 1024
         fp_bytes = 32 * MB
         n_objects, obj_bytes = 200, 64 * 1024
+        rec_objects, rec_bytes = 48, 16 * 1024
 
     report = {
         "quick": args.quick,
         "cdc": bench_cdc(cdc_bytes, scalar_bytes),
         "fingerprint": bench_fingerprint(fp_bytes),
         "write_path": bench_write_path(n_objects, obj_bytes),
+        "recovery": bench_recovery(rec_objects, rec_bytes),
     }
     out = args.out or Path(__file__).resolve().parent.parent / "BENCH_write_path.json"
     out.write_text(json.dumps(report, indent=2) + "\n")

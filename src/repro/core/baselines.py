@@ -85,7 +85,7 @@ def _init_transport_stats(cluster) -> None:
         cluster.transport = Transport(handlers=cluster.nodes)
     _require_reliable(cluster)
     if cluster.stats is None:
-        cluster.stats = ClusterStats(cluster.transport)
+        cluster.stats = ClusterStats(cluster.transport, cluster.nodes)
 
 
 @dataclass

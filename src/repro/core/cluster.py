@@ -55,7 +55,6 @@ from repro.core.messages import (
     ChunkOpBatch,
     ChunkRead,
     DecrefBatch,
-    MigrateChunk,
     OmapDelete,
     OmapGet,
     OmapPut,
@@ -88,8 +87,9 @@ class ClusterStats:
     network/message counters are *views* over the Transport's accounting
     (legacy field names preserved — nothing hand-maintains them anymore)."""
 
-    def __init__(self, transport: Transport):
+    def __init__(self, transport: Transport, nodes: dict | None = None):
         self._transport = transport
+        self._nodes = nodes if nodes is not None else {}
         self.logical_bytes_written = 0
         self.writes_ok = 0
         self.writes_failed = 0
@@ -148,6 +148,23 @@ class ClusterStats:
         """Simulated ticks senders spent waiting on acks that never came."""
         return self._transport.timeout_ticks_waited
 
+    # --- seen-window eviction pressure (per-node, aggregated) --------------
+    @property
+    def seen_evictions(self) -> int:
+        """Message ids the bounded per-node seen-windows pushed out. Zero
+        at default sizing; anything else means in-flight depth approached
+        the point where a late duplicate could slip past dedup (the
+        ROADMAP's seen-window sizing signal)."""
+        return sum(n.stats.seen_evictions for n in self._nodes.values())
+
+    @property
+    def seen_high_water(self) -> int:
+        """Peak seen-window occupancy across nodes — how close the cluster
+        came to eviction pressure."""
+        return max(
+            (n.stats.seen_high_water for n in self._nodes.values()), default=0
+        )
+
     def __repr__(self) -> str:  # debugging convenience
         return (
             f"ClusterStats(logical={self.logical_bytes_written}, "
@@ -176,28 +193,27 @@ class DedupCluster:
     coalesce_batches: bool = True
     # At-least-once delivery: retransmissions chasing a lost message/ack
     # (0 = legacy fire-and-forget) and the simulated-ticks ack timeout per
-    # attempt. Applied to the transport, where the retry loop lives.
-    retry_budget: int = 0
-    ack_timeout: int = 2
+    # attempt. None = unset: inherit the transport's settings (an injected
+    # transport keeps its own, a created one uses the Transport defaults);
+    # any explicit value — INCLUDING an explicit 0 / 2 — wins over an
+    # injected transport's configuration. After construction both fields
+    # mirror the transport's truth.
+    retry_budget: int | None = None
+    ack_timeout: int | None = None
     _txn_counter: int = 0
 
     def __post_init__(self) -> None:
-        created = self.transport is None
-        if created:
+        if self.transport is None:
             self.transport = Transport(handlers=self.nodes)
         self.transport.fault_hook = self._transport_fault
-        # Retry configuration: the cluster fields drive a transport we
-        # created; an injected transport keeps its own settings unless the
-        # caller ALSO passed non-default cluster values (which win). Either
-        # way the cluster fields end up mirroring the transport's truth.
-        if created or self.retry_budget:
+        if self.retry_budget is not None:
             self.transport.retry_budget = self.retry_budget
-        if created or self.ack_timeout != DedupCluster.ack_timeout:
+        if self.ack_timeout is not None:
             self.transport.ack_timeout = self.ack_timeout
         self.retry_budget = self.transport.retry_budget
         self.ack_timeout = self.transport.ack_timeout
         if self.stats is None:
-            self.stats = ClusterStats(self.transport)
+            self.stats = ClusterStats(self.transport, self.nodes)
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
@@ -487,17 +503,13 @@ class DedupCluster:
                 )
                 if bad is not None:
                     raise WriteError(f"chunk {bad} of {name!r}: no live target")
-                if plan["prev"] is not None:
-                    # Release the replaced version's refs now that this
-                    # object is definitely committing. The new ops already
-                    # took their refs, so shared chunks dip to N, not 0 —
-                    # same end state as the serial delete-then-write order.
-                    self._delete_entry(plan["prev"], src=primary)
                 self._fault("before_omap", name=name, txn=plan["txn"])
                 if not self.nodes[primary].alive:
                     raise NodeDown(primary)
                 ofp = object_fp(plan["fps"])
-                entry = OMAPEntry(name, ofp, list(plan["fps"]), len(plan["data"]))
+                entry = OMAPEntry(
+                    name, ofp, list(plan["fps"]), len(plan["data"]), plan["txn"]
+                )
                 wrote = self._commit_omap(primary, name, entry)
                 if not wrote:
                     raise WriteError(f"no live OMAP target for {name!r} at commit")
@@ -507,6 +519,14 @@ class DedupCluster:
                 failure = WriteError(f"write {name!r} failed: {e}")
                 failure.__cause__ = e
                 continue
+            if plan["prev"] is not None:
+                # Release the replaced version's refs only now that the
+                # commit record is durably written (the OmapPut overwrote
+                # the old entry in place — no OmapDelete needed): a
+                # failure anywhere before this leaves the previous version
+                # fully intact. The new ops already took their refs, so
+                # shared chunks dip to N, not 0.
+                self._release_entry_refs(plan["prev"], src=primary)
             self.stats.writes_ok += 1
             results.append(ofp)
 
@@ -615,18 +635,19 @@ class DedupCluster:
         self._fault("primary_selected", name=name, primary=primary, txn=txn)
 
         # Idempotence: rewriting an identical object is a no-op; rewriting
-        # different content under an existing name replaces it (old refs
-        # released first so refcounts stay exact).
+        # different content under an existing name replaces it — but the
+        # old refs are released at COMMIT time (matching the coalesced
+        # wave): a failed replace leaves the previous version fully intact,
+        # so a client retry releases it exactly once instead of
+        # double-decrementing refs a failed first attempt already dropped.
         try:
             prev = self._omap_lookup(name, src=primary, strict=True)
         except WriteError:
             self.stats.writes_failed += 1
             raise
-        if prev is not None:
-            if prev.object_fp == object_fp(fps):
-                self.stats.writes_ok += 1
-                return prev.object_fp
-            self._delete_entry(prev, src=primary)
+        if prev is not None and prev.object_fp == object_fp(fps):
+            self.stats.writes_ok += 1
+            return prev.object_fp
 
         # 2. fingerprint-routed chunk unicasts, batched per target node.
         acked: list[tuple[Fingerprint, list[str]]] = []
@@ -653,7 +674,7 @@ class DedupCluster:
             if not self.nodes[primary].alive:
                 raise NodeDown(primary)
             ofp = object_fp(fps)
-            entry = OMAPEntry(name=name, object_fp=ofp, chunk_fps=list(fps), size=len(data))
+            entry = OMAPEntry(name, ofp, list(fps), len(data), txn)
             if not self._commit_omap(primary, name, entry):
                 raise WriteError(f"no live OMAP target for {name!r} at commit")
         except (NodeDown, TransactionAbort, WriteError) as e:
@@ -663,6 +684,11 @@ class DedupCluster:
             self.stats.writes_failed += 1
             raise WriteError(f"write {name!r} failed: {e}") from e
 
+        if prev is not None:
+            # Committed (the OmapPut overwrote the old entry in place):
+            # release the replaced version's refs, exactly once. Any
+            # failure above left the previous version fully intact.
+            self._release_entry_refs(prev, src=primary)
         self.stats.writes_ok += 1
         return ofp
 
@@ -774,7 +800,10 @@ class DedupCluster:
         if any(cnt == 0 for cnt in holders.values()):
             _undo()
             return None
-        entry = OMAPEntry(name, src.object_fp, list(src.chunk_fps), src.size)
+        self._txn_counter += 1
+        entry = OMAPEntry(
+            name, src.object_fp, list(src.chunk_fps), src.size, self._txn_counter
+        )
         if not self._commit_omap("client", name, entry):
             _undo()
             return None
@@ -837,15 +866,21 @@ class DedupCluster:
         return True
 
     def _delete_entry(self, entry: OMAPEntry, src: str) -> None:
-        """Remove an already-fetched OMAP entry and release its chunk refs.
-        The write path's replace passes the entry from its strict lookup
-        here directly — re-probing could lose the probe under a lossy
-        policy and leak the old version's refcounts forever."""
+        """Remove an already-fetched OMAP entry and release its chunk refs
+        (the delete path; a replace releases refs only, the new OmapPut
+        overwrites the record in place)."""
         for t in self._live(self.omap_targets(entry.name)):
             try:
                 self.transport.send(src, t, OmapDelete(entry.name), self.now)
             except (MessageDropped, NodeDown):
                 pass
+        self._release_entry_refs(entry, src)
+
+    def _release_entry_refs(self, entry: OMAPEntry, src: str) -> None:
+        """Release an entry's chunk refs, one DecrefBatch per node. The
+        write path's replace passes the entry from its strict lookup here
+        directly — re-probing could lose the probe under a lossy policy
+        and leak the old version's refcounts forever."""
         per_node: dict[str, list[Fingerprint]] = {}
         for fp in entry.chunk_fps:
             for t in self._live(self.chunk_targets(fp)):
@@ -861,72 +896,21 @@ class DedupCluster:
         """Topology change + storage rebalance (paper Fig 1b).
 
         Content placement means we only *move* chunks; no dedup-metadata
-        location rewrite happens anywhere (the paper's key win). CIT entries
-        travel with their chunks (MigrateChunk); OMAP entries move by name
-        hash (OmapPut with migrate=True). Under a lossy delivery policy a
-        move can be lost in flight — replicas and ``scrub`` are the repair
-        story, exactly as for node loss.
+        location rewrite happens anywhere (the paper's key win). The move
+        itself is the recovery subsystem's per-node rebalance driver
+        (``core/recovery.py``): CIT entries travel with their chunks
+        (MigrateChunk); OMAP entries move by name hash (OmapPut with
+        migrate=True). Under a lossy delivery policy a move can be lost in
+        flight — replicas and the digest repair round (``scrub``) are the
+        repair story, exactly as for node loss.
         """
+        from repro.core.recovery import rebalance
+
         for nid in new_map.nodes:
             if nid not in self.nodes:
                 self.nodes[nid] = StorageNode(nid)
-        old = self.cmap
         self.cmap = new_map
-
-        for nid, node in list(self.nodes.items()):
-            if not node.alive:
-                continue
-            # --- migrate chunks + their CIT entries --------------------------
-            for fp in list(node.chunk_store.keys()):
-                targets = place(fp, new_map)
-                if nid in targets:
-                    continue
-                data = node.chunk_store.pop(fp)
-                entry = node.shard.cit_lookup(fp)
-                if entry is not None:
-                    node.shard.cit_remove(fp)
-                snap = entry.snapshot() if entry is not None else None
-                moved = False
-                for t in self._live(targets):
-                    needs_bytes = fp not in self.nodes[t].chunk_store
-                    msg = MigrateChunk(fp, data if needs_bytes else None, snap)
-                    try:
-                        self.transport.send(nid, t, msg, self.now)
-                    except (MessageDropped, NodeDown):
-                        continue
-                    if needs_bytes:
-                        moved = True
-                if moved:
-                    self.stats.rebalance_chunks_moved += 1
-                    self.stats.rebalance_bytes_moved += len(data)
-            # --- stray CIT entries without local bytes (tombstones) ---------
-            for fp in list(node.shard.cit.keys()):
-                targets = place(fp, new_map)
-                if nid in targets:
-                    continue
-                entry = node.shard.cit_lookup(fp)
-                node.shard.cit_remove(fp)
-                if entry is None:
-                    continue
-                snap = entry.snapshot()
-                for t in self._live(targets):
-                    try:
-                        self.transport.send(nid, t, MigrateChunk(fp, None, snap), self.now)
-                    except (MessageDropped, NodeDown):
-                        continue
-            # --- migrate OMAP entries by object-name hash --------------------
-            for name in list(node.shard.omap.keys()):
-                targets = place(name_fp(name), new_map)
-                if nid in targets:
-                    continue
-                e = node.shard.omap_delete(name)
-                assert e is not None
-                for t in self._live(targets):
-                    try:
-                        self.transport.send(nid, t, OmapPut(e, migrate=True), self.now)
-                    except (MessageDropped, NodeDown):
-                        continue
-        _ = old
+        rebalance(self)
 
     def add_node(self, weight: float = 1.0) -> str:
         nid = f"oss{len(self.nodes)}"
@@ -936,30 +920,27 @@ class DedupCluster:
     def remove_node(self, nid: str) -> None:
         self.set_map(self.cmap.without_node(nid))
 
+    # -------------------------------------------------------------- recovery
     def scrub(self) -> int:
-        """Re-replication repair: ensure every chunk is on all live targets
-        (one MigrateChunk per missing copy). Returns copies restored."""
-        restored = 0
-        holders: dict[Fingerprint, list[str]] = {}
-        for nid, node in self.nodes.items():
-            if not node.alive:
-                continue
-            for fp in node.chunk_store:
-                holders.setdefault(fp, []).append(nid)
-        for fp, have in holders.items():
-            src = self.nodes[have[0]]
-            entry = src.shard.cit_lookup(fp)
-            snap = entry.snapshot() if entry is not None else None
-            for t in self._live(self.chunk_targets(fp)):
-                if fp in self.nodes[t].chunk_store:
-                    continue
-                msg = MigrateChunk(fp, src.chunk_store[fp], snap)
-                try:
-                    self.transport.send(have[0], t, msg, self.now)
-                except (MessageDropped, NodeDown):
-                    continue
-                restored += 1
-        return restored
+        """Re-replication repair, digest-driven (``core/recovery.py``):
+        nodes exchange per-placement-group digests over the transport, only
+        divergent groups are expanded, and every missing byte copy / CIT
+        entry ships as a ``RepairChunk`` from a surviving holder. Returns
+        byte copies restored."""
+        from repro.core.recovery import repair_round
+
+        return repair_round(self)
+
+    def recover(self):
+        """Full post-failure reconciliation round: OMAP repair ->
+        digest-diff chunk repair -> cluster-wide refcount audit -> GC
+        (``core/recovery.py``). This is the post-partition heal path, and
+        what reclaims references leaked when a ``TxnCancel`` was itself
+        lost after an applied-but-unacked op. Returns a
+        ``RecoveryReport``."""
+        from repro.core.recovery import run_recovery
+
+        return run_recovery(self)
 
     # --------------------------------------------------------------- metrics
     def unique_bytes_stored(self) -> int:

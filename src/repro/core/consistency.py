@@ -38,6 +38,7 @@ class ConsistencyManager:
     flips_lost_to_crash: int = 0
     flips_coalesced: int = 0       # duplicate due-flips merged per drain pass
     flips_deduped: int = 0         # registrations refused: message id already seen
+    flips_purged: int = 0          # queued flips dropped by a refcount audit
     # At-least-once guard: message ids whose flips were already registered.
     # The node's seen-window suppresses duplicate deliveries before they
     # reach us; this bounded window is the flip queue's own belt-and-braces
@@ -91,6 +92,20 @@ class ConsistencyManager:
             n += 1
         self.flips_applied += n
         return n
+
+    def purge(self, fps) -> int:
+        """Drop queued flips for fingerprints a refcount audit just proved
+        unreferenced (belt-and-braces: ``drain`` already refuses to flip a
+        refcount-0 entry, but the audit KNOWS these flips belong to a
+        leaked/rolled-back transaction, so they should not linger and fire
+        against a later re-insert of the same fingerprint). Returns the
+        number of flips dropped."""
+        doomed = set(fps)
+        before = len(self.queue)
+        self.queue = [p for p in self.queue if p.fp not in doomed]
+        dropped = before - len(self.queue)
+        self.flips_purged += dropped
+        return dropped
 
     def crash(self) -> None:
         self.flips_lost_to_crash += len(self.queue)

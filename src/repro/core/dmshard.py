@@ -18,12 +18,39 @@ Commit flag semantics (tagged consistency, paper §2.4):
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
-from repro.core.fingerprint import Fingerprint
+from repro.core.fingerprint import Fingerprint, name_fp
 
 INVALID = 0
 VALID = 1
+
+
+def digest_hash(fp: Fingerprint, has_bytes: bool, has_cit: bool) -> int:
+    """Order-independent per-entry hash for recovery digests. Presence of
+    the chunk bytes and of the CIT entry are part of the identity — two
+    replicas disagree exactly when one is missing either — while refcount
+    and flag are deliberately EXCLUDED: replicas legitimately diverge there
+    in transit (pending async flips), and reconciling refcounts is the
+    audit's job, not the digest diff's."""
+    h = hashlib.blake2s(digest_size=8)
+    h.update(fp.namespace.encode())
+    h.update(fp.value)
+    h.update(bytes((has_bytes, has_cit)))
+    return int.from_bytes(h.digest(), "big")
+
+
+def omap_digest_hash(name: str, object_fp: Fingerprint) -> int:
+    """Per-entry hash for OMAP digests: the recipe identity is
+    (name, object fingerprint) — replicas holding different versions of a
+    name (which name-hash primary routing makes impossible without data
+    loss) or missing the name entirely digest differently."""
+    h = hashlib.blake2s(digest_size=8)
+    h.update(name.encode("utf-8"))
+    h.update(object_fp.namespace.encode())
+    h.update(object_fp.value)
+    return int.from_bytes(h.digest(), "big")
 
 
 @dataclass
@@ -60,6 +87,14 @@ class OMAPEntry:
     object_fp: Fingerprint
     chunk_fps: list[Fingerprint]
     size: int
+    # Commit version: the committing transaction's cluster-monotonic id.
+    # Recovery's OMAP repair elects the replica holding the HIGHEST version
+    # as authority — placement order alone would let a primary that was
+    # down across a replace resurrect the old version cluster-wide, and a
+    # per-name counter would reset on delete+recreate (letting a stale
+    # higher-versioned replica overwrite the fresh entry); the txn counter
+    # only ever grows, so the latest commit always wins.
+    version: int = 1
 
 
 @dataclass
@@ -119,6 +154,89 @@ class DMShard:
 
     def omap_delete(self, name: str) -> OMAPEntry | None:
         return self.omap.pop(name, None)
+
+    # --- recovery digests (per-placement-group content summaries) -----------
+    def chunk_digest(
+        self,
+        chunk_store: dict[Fingerprint, bytes],
+        cmap,
+        groups: tuple = (),
+        detail_all: bool = False,
+    ) -> tuple[dict, dict]:
+        """Digest THIS shard's chunk/CIT holdings, grouped by the placement
+        tuple each fingerprint hashes to under ``cmap``. Returns
+        ``(summary, entries)``: summary maps group -> (count, xor-hash);
+        entries (detail mode: ``groups`` named or ``detail_all``) map
+        fp -> (has_bytes, has_cit, refcount, flag, size). Strictly
+        node-local — the wire view of this node a recovery coordinator
+        reconciles against."""
+        from repro.core.placement import place
+
+        want = set(groups)
+        detail = detail_all or bool(want)
+        summary: dict = {}
+        entries: dict = {}
+        for fp in set(self.cit) | set(chunk_store):
+            g = tuple(place(fp, cmap))
+            if not detail:
+                cnt, xo = summary.get(g, (0, 0))
+                summary[g] = (cnt + 1, xo ^ digest_hash(fp, fp in chunk_store, fp in self.cit))
+                continue
+            if not detail_all and g not in want:
+                continue
+            e = self.cit.get(fp)
+            entries[fp] = (
+                fp in chunk_store,
+                e is not None,
+                e.refcount if e is not None else 0,
+                e.flag if e is not None else INVALID,
+                e.size if e is not None else 0,
+            )
+        return summary, entries
+
+    def omap_digest(
+        self, cmap, groups: tuple = (), detail_all: bool = False
+    ) -> tuple[dict, dict]:
+        """Digest THIS shard's OMAP entries, grouped by object-name
+        placement. Detail entries map name -> (object fingerprint, commit
+        version) — the identity and authority a repair needs to pick a
+        holder; the recipe itself travels with the repairing ``OmapPut``,
+        not with the digest."""
+        from repro.core.placement import place
+
+        want = set(groups)
+        detail = detail_all or bool(want)
+        summary: dict = {}
+        entries: dict = {}
+        for name, e in self.omap.items():
+            g = tuple(place(name_fp(name), cmap))
+            if not detail:
+                cnt, xo = summary.get(g, (0, 0))
+                summary[g] = (cnt + 1, xo ^ omap_digest_hash(name, e.object_fp))
+            elif detail_all or g in want:
+                entries[name] = (e.object_fp, e.version)
+        return summary, entries
+
+    def recipe_refs(self, cmap, live: tuple, self_id: str) -> dict[Fingerprint, int]:
+        """Aggregated chunk-reference counts from the recipes this node
+        OWNS: it is the first live name-hash target of the entry under
+        ``cmap`` given the coordinator's ``live`` set — so across the
+        cluster every logical object is counted by exactly one owner, even
+        though OMAP entries are replicated. Occurrences count: an object
+        whose recipe repeats a chunk took one reference per occurrence."""
+        from repro.core.placement import place
+
+        live_set = set(live)
+        counts: dict[Fingerprint, int] = {}
+        for name, e in self.omap.items():
+            owner = next(
+                (t for t in place(name_fp(name), cmap) if t in live_set), None
+            )
+            if owner != self_id:
+                continue
+            for fp in e.chunk_fps:
+                counts[fp] = counts.get(fp, 0) + 1
+        return counts
 
     # --- introspection -------------------------------------------------------
     def stored_bytes(self) -> int:

@@ -32,6 +32,7 @@ class GarbageCollector:
     collected_bytes: int = 0
     spared: int = 0
     repaired: int = 0
+    audit_fed: int = 0             # entries fed pre-aged by a refcount audit
 
     def scan(self, shard: DMShard, now: int) -> None:
         """Phase 1: collect currently-invalid fingerprints into the held set."""
@@ -40,6 +41,20 @@ class GarbageCollector:
                 e = shard.cit_lookup(fp)
                 assert e is not None
                 self.held[fp] = _Held(fp, now, e.refcount)
+
+    def note_audit(self, shard: DMShard, fp: Fingerprint, now: int) -> None:
+        """Feed an audit result into the aging cross-match: the cluster-wide
+        refcount audit PROVED ``fp`` unreferenced by any OMAP recipe, which
+        is exactly the evidence the aging threshold normally waits to
+        accumulate — so the entry enters the held set pre-aged and the next
+        sweep may collect it immediately. The cross-match itself still
+        applies: any refcount/flag change between the audit's observation
+        and the sweep (a racing re-reference) spares the entry."""
+        e = shard.cit_lookup(fp)
+        if e is None or e.flag != INVALID:
+            return
+        self.held[fp] = _Held(fp, now - self.threshold, e.refcount)
+        self.audit_fed += 1
 
     def sweep(self, shard: DMShard, chunk_store: dict[Fingerprint, bytes], now: int) -> list[Fingerprint]:
         """Phase 2: cross-match aged fingerprints; delete the unchanged ones.

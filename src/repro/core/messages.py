@@ -34,6 +34,16 @@ from repro.core.fingerprint import Fingerprint
 CONTROL_MSG_BYTES = 64  # modeled size of a lookup/refcount message header
 ACK_MSG_BYTES = 64      # modeled size of the per-delivery ack on the reverse edge
 
+# Recovery digest wire model (docs/recovery.md): a summary digest costs a
+# fixed record per placement group, detail listings cost a record per entry.
+# Digest-diff recovery trades these small records against shipping (or
+# omnisciently scanning) whole CIT/OMAP tables — the scalable-reconciliation
+# argument of the disaster-recovery literature.
+DIGEST_GROUP_BYTES = 16   # per-group summary record: (count, xor-of-hashes)
+DIGEST_ENTRY_BYTES = 48   # per-fp detail record: fp + (has_bytes, refcount, flag, size)
+RECIPE_REF_BYTES = 40     # per (chunk_fp, count) recipe-reference pair (audit)
+OMAP_DIGEST_ENTRY_BYTES = 48  # per-name detail record: name hash + object fp + size
+
 
 class Message:
     """Base for all wire messages. Subclasses are frozen dataclasses."""
@@ -133,10 +143,15 @@ class OmapDelete(Message):
 @dataclass(frozen=True)
 class DecrefBatch(Message):
     """Batched refcount release (delete / transaction rollback): one unicast
-    releasing many references on one node."""
+    releasing many references on one node. A fingerprint may appear more
+    than once (one decrement each). ``audit=True`` marks corrections emitted
+    by the cluster-wide refcount audit: references the audit *proved*
+    unreferenced by any OMAP recipe skip the GC aging wait (the audit's
+    recipe walk IS the cross-match evidence aging normally buys)."""
 
     TYPE = "decref_batch"
     fps: tuple[Fingerprint, ...] = ()
+    audit: bool = False
 
 
 @dataclass(frozen=True)
@@ -181,6 +196,109 @@ class MigrateChunk(Message):
 
 
 @dataclass(frozen=True)
+class DigestRequest(Message):
+    """Recovery digest probe (coordinator -> node). The node summarizes its
+    OWN holdings — it never answers for anyone else — and the reply rides
+    the ack like every response.
+
+    ``kind``:
+      * ``"chunks"``  — per-placement-group (count, xor-hash) summary of the
+        node's chunk/CIT holdings; with ``groups`` set, a per-fp detail
+        listing for exactly those groups; with ``detail_all=True``, details
+        for everything (the audit's actual-refcount source).
+      * ``"omap"``    — the same two-level digest over OMAP entries, grouped
+        by object-name placement.
+      * ``"recipes"`` — aggregated chunk-reference counts from the recipes
+        this node *owns* (it is the first LIVE name-hash target given
+        ``live``) — the audit's expected-refcount source; each logical
+        object is counted by exactly one owner.
+
+    The cluster map travels with the request (versioned, tiny — modeled as
+    control-only, like an OSDMap epoch share) so the node groups by the
+    placement the coordinator is reconciling against."""
+
+    TYPE = "digest_request"
+    kind: str = "chunks"
+    cmap: object = None           # ClusterMap (placement the digest is keyed by)
+    groups: tuple = ()            # () = summary; else detail for these groups
+    detail_all: bool = False      # detail for every group (audit)
+    live: tuple[str, ...] = ()    # live set for recipe ownership (kind="recipes")
+
+    def response_payload_bytes(self, response) -> int:
+        if isinstance(response, DigestReply):
+            return response.reply_bytes()
+        return 0
+
+
+@dataclass(frozen=True)
+class DigestReply(Message):
+    """A node's digest of its own holdings (the response riding a
+    ``DigestRequest`` ack). ``groups`` maps placement-group key ->
+    ``(count, xor_hash)``; ``entries`` carries detail records:
+
+      * chunks detail: fp -> (has_bytes, refcount, flag, size)
+      * omap detail:   name -> object_fp
+      * recipes:       fp -> reference count from owned recipes
+
+    Wire cost is per record (see the DIGEST_*/RECIPE_* constants) — the
+    whole point of digest-based reconciliation: summaries are O(groups),
+    details are fetched only for groups that disagree."""
+
+    TYPE = "digest_reply"
+    kind: str = "chunks"
+    groups: dict = None           # type: ignore[assignment]
+    entries: dict = None          # type: ignore[assignment]
+
+    def reply_bytes(self) -> int:
+        total = DIGEST_GROUP_BYTES * len(self.groups or ())
+        n = len(self.entries or ())
+        if self.kind == "recipes":
+            total += RECIPE_REF_BYTES * n
+        elif self.kind == "omap":
+            total += OMAP_DIGEST_ENTRY_BYTES * n
+        else:
+            total += DIGEST_ENTRY_BYTES * n
+        return total
+
+
+@dataclass(frozen=True)
+class RepairChunk(Message):
+    """Digest-diff repair move (holder -> target): chunk bytes (``data``;
+    None for a metadata-only repair) and/or the CIT entry snapshot a target
+    is missing. Unlike the rebalance ``MigrateChunk`` the snapshot here is
+    reconstructed from wire-learned digest details, not read from a foreign
+    shard. Receiver-side it is adopt-if-missing (idempotent) and rides the
+    seen-window like every mutating message; the response reports what was
+    actually adopted ('stored'|'present', 'cit_stored'|'cit_present'|'')."""
+
+    TYPE = "repair_chunk"
+    fp: Fingerprint = None  # type: ignore[assignment]
+    data: bytes | None = None
+    cit: CITEntry | None = None
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        return len(self.data) if self.data is not None else 0
+
+
+@dataclass(frozen=True)
+class RefAudit(Message):
+    """Refcount-audit correction (coordinator -> CIT owner): for each
+    ``(fp, expected_refcount)`` item the node raises a refcount that is
+    BELOW what the cluster's recipes reference (a replica that missed
+    increfs while unreachable) and repairs a stuck-INVALID flag when the
+    recipes prove the chunk live and the bytes are present (the lost
+    async-flip case). Excess references travel separately as audit-tagged
+    ``DecrefBatch`` messages. Control-only on the wire; ``lookups()``
+    counts the CIT probes carried."""
+
+    TYPE = "ref_audit"
+    items: tuple = ()             # ((fp, expected_refcount), ...)
+
+    def lookups(self) -> int:
+        return len(self.items)
+
+
+@dataclass(frozen=True)
 class TxnCancel(Message):
     """Conditional compensation for the at-least-once ambiguity window.
 
@@ -222,6 +340,10 @@ MESSAGE_TYPES = (
     RefOnlyWrite,
     ChunkRead,
     MigrateChunk,
+    DigestRequest,
+    DigestReply,
+    RepairChunk,
+    RefAudit,
     TxnCancel,
     RawPut,
 )

@@ -20,13 +20,17 @@ from repro.core.messages import (
     ChunkOpBatch,
     ChunkRead,
     DecrefBatch,
+    DigestReply,
+    DigestRequest,
     Message,
     MigrateChunk,
     OmapDelete,
     OmapGet,
     OmapPut,
     RawPut,
+    RefAudit,
     RefOnlyWrite,
+    RepairChunk,
     TxnCancel,
 )
 from repro.core.transport import BoundedIdSet, Envelope, SeenWindow
@@ -50,6 +54,13 @@ class NodeStats:
     poisoned_discards: int = 0     # late copies of cancelled messages discarded
     out_of_order: int = 0          # arrivals with a seq below the edge high-water
     cancels_applied: int = 0       # TxnCancel compensations that found the op applied
+    seen_evictions: int = 0        # ids the bounded seen-window pushed out (pressure)
+    seen_high_water: int = 0       # peak seen-window occupancy
+    digests_served: int = 0        # recovery digest requests answered
+    repairs_adopted: int = 0       # RepairChunk deliveries that stored bytes or a CIT entry
+    audit_increfs: int = 0         # references an audit correction restored
+    audit_decrefs: int = 0         # references an audit-tagged DecrefBatch released
+    audit_flag_flips: int = 0      # stuck-INVALID flags an audit correction repaired
 
 
 @dataclass
@@ -103,8 +114,11 @@ class StorageNode:
         # Reads mutate nothing a duplicate could corrupt (repair-on-read is
         # idempotent), so they stay OUT of the seen-window: recording them
         # would let read traffic evict mutating message ids and silently
-        # re-open the double-apply window the bound is sized for.
-        mutating = not isinstance(msg, (ChunkRead, OmapGet))
+        # re-open the double-apply window the bound is sized for. Digest
+        # probes are reads too — a duplicated DigestRequest just recomputes
+        # the same summary. RepairChunk / RefAudit / audit DecrefBatch are
+        # mutating and ride the window like every other recovery-era write.
+        mutating = not isinstance(msg, (ChunkRead, OmapGet, DigestRequest))
         if env is not None:
             if env.msg_id in self._poisoned:
                 # A late copy of a message the sender already cancelled:
@@ -123,7 +137,10 @@ class StorageNode:
                     return cached
         response = self._dispatch(msg, now, env.msg_id if env is not None else None)
         if env is not None and mutating:
-            self.seen.record(env.msg_id, response)
+            self.stats.seen_evictions += self.seen.record(env.msg_id, response)
+            self.stats.seen_high_water = max(
+                self.stats.seen_high_water, self.seen.high_water
+            )
         return response
 
     def _dispatch(self, msg: Message, now: int, msg_id: int | None = None):
@@ -133,12 +150,14 @@ class StorageNode:
             return self.shard.omap_get(msg.name)
         if isinstance(msg, OmapPut):
             e = msg.entry
-            self.shard.omap_put(OMAPEntry(e.name, e.object_fp, list(e.chunk_fps), e.size))
+            self.shard.omap_put(
+                OMAPEntry(e.name, e.object_fp, list(e.chunk_fps), e.size, e.version)
+            )
             return True
         if isinstance(msg, OmapDelete):
             return self.shard.omap_delete(msg.name)
         if isinstance(msg, DecrefBatch):
-            self.decref_chunks(list(msg.fps), now)
+            self.decref_chunks(list(msg.fps), now, audit=msg.audit)
             return True
         if isinstance(msg, RefOnlyWrite):
             return tuple(self._apply_ref_only(fp, now) for fp in msg.fps)
@@ -146,6 +165,12 @@ class StorageNode:
             return self.read_chunk(msg.fp, now)
         if isinstance(msg, MigrateChunk):
             return self._apply_migrate(msg, now)
+        if isinstance(msg, DigestRequest):
+            return self._serve_digest(msg)
+        if isinstance(msg, RepairChunk):
+            return self._apply_repair(msg, now)
+        if isinstance(msg, RefAudit):
+            return self._apply_ref_audit(msg, now)
         if isinstance(msg, TxnCancel):
             return self._apply_cancel(msg, now)
         if isinstance(msg, RawPut):
@@ -287,6 +312,73 @@ class StorageNode:
             msg.cit.clone_into(self.shard, msg.fp, now)
         return "ok"
 
+    # ------------------------------------------------------------- recovery
+    def _serve_digest(self, msg: DigestRequest) -> DigestReply:
+        """Answer a recovery coordinator's digest probe over this node's OWN
+        holdings (read-only — a duplicated probe recomputes harmlessly)."""
+        self.stats.digests_served += 1
+        if msg.kind == "recipes":
+            counts = self.shard.recipe_refs(msg.cmap, msg.live, self.node_id)
+            return DigestReply(kind="recipes", groups={}, entries=counts)
+        if msg.kind == "omap":
+            summary, entries = self.shard.omap_digest(
+                msg.cmap, msg.groups, msg.detail_all
+            )
+            return DigestReply(kind="omap", groups=summary, entries=entries)
+        summary, entries = self.shard.chunk_digest(
+            self.chunk_store, msg.cmap, msg.groups, msg.detail_all
+        )
+        return DigestReply(kind="chunks", groups=summary, entries=entries)
+
+    def _apply_repair(self, msg: RepairChunk, now: int) -> tuple[str, str]:
+        """Digest-diff repair: adopt-if-missing, precisely reported. The
+        response tells the coordinator what actually changed so a repair
+        raced by a rebalance (or a duplicated delivery replayed from the
+        seen-window) is visibly a no-op instead of a silent double-count."""
+        bytes_outcome = "present" if msg.fp in self.chunk_store else ""
+        if msg.data is not None and not bytes_outcome:
+            self.chunk_store[msg.fp] = msg.data
+            self.stats.disk_bytes_written += len(msg.data)
+            bytes_outcome = "stored"
+        cit_outcome = ""
+        if msg.cit is not None:
+            cit_outcome = (
+                "cit_stored"
+                if msg.cit.clone_into(self.shard, msg.fp, now) is not None
+                else "cit_present"
+            )
+        if bytes_outcome == "stored" or cit_outcome == "cit_stored":
+            self.stats.repairs_adopted += 1
+        return (bytes_outcome, cit_outcome)
+
+    def _apply_ref_audit(self, msg: RefAudit, now: int) -> tuple[str, ...]:
+        """Apply upward refcount corrections and flag repairs from the
+        cluster-wide audit. Each item carries the reference count the
+        cluster's OMAP recipes prove for this fingerprint; raising to it is
+        idempotent by construction (and the message rides the seen-window
+        regardless). Excess references arrive separately as audit-tagged
+        DecrefBatch messages."""
+        out: list[str] = []
+        for fp, expected in msg.items:
+            entry = self.shard.cit_lookup(fp)
+            if entry is None:
+                out.append("absent")
+                continue
+            action = "ok"
+            if entry.refcount < expected:
+                self.stats.audit_increfs += expected - entry.refcount
+                self.shard.cit_addref(fp, expected - entry.refcount)
+                action = "incref"
+            if expected > 0 and entry.flag == INVALID and fp in self.chunk_store:
+                # Recipes prove the chunk live and the bytes are on disk:
+                # the async flip was lost (crash / cancelled txn race) —
+                # the same consistency check the read path runs.
+                self.shard.cit_set_flag(fp, VALID, now)
+                self.stats.audit_flag_flips += 1
+                action = "flag_valid" if action == "ok" else action + "+flag"
+            out.append(action)
+        return tuple(out)
+
     def read_chunk(self, fp: Fingerprint, now: int) -> bytes:
         self._require_alive()
         data = self.chunk_store.get(fp)
@@ -313,10 +405,26 @@ class StorageNode:
             # GC ages it out; a re-reference before GC repairs it back.
             self.shard.cit_set_flag(fp, INVALID, now)
 
-    def decref_chunks(self, fps: list[Fingerprint], now: int) -> None:
-        """Batched refcount release (rollback / delete): one unicast."""
+    def decref_chunks(
+        self, fps: list[Fingerprint], now: int, audit: bool = False
+    ) -> None:
+        """Batched refcount release (rollback / delete): one unicast.
+        ``audit=True`` marks releases the cluster-wide refcount audit
+        PROVED unreferenced by any recipe: entries driven to zero skip the
+        GC aging wait (the recipe walk is the cross-match evidence aging
+        normally buys) and any still-queued async flips for them are
+        purged — they belong to the leaked transaction being reclaimed."""
         for fp in fps:
             self.decref_chunk(fp, now)
+        if not audit:
+            return
+        self.stats.audit_decrefs += len(fps)
+        dead = [fp for fp in dict.fromkeys(fps)
+                if (e := self.shard.cit_lookup(fp)) is not None and e.refcount == 0]
+        for fp in dead:
+            self.gc.note_audit(self.shard, fp, now)
+        if dead:
+            self.cm.purge(dead)
 
     def has_chunk(self, fp: Fingerprint) -> bool:
         return fp in self.chunk_store

@@ -118,6 +118,13 @@ class SeenWindow:
 
     def __init__(self, capacity: int = 1024):
         self.capacity = capacity
+        # Eviction pressure (ROADMAP's seen-window sizing study): ids pushed
+        # out by the bound, and the peak occupancy. At default sizing both
+        # should read zero pressure — anything else means in-flight depth is
+        # approaching the point where a late duplicate could slip past the
+        # window and re-apply.
+        self.evictions = 0
+        self.high_water = 0
         self._responses: dict[int, object] = {}
         self._order: deque[int] = deque()
 
@@ -135,14 +142,21 @@ class SeenWindow:
     def ABSENT(self):
         return self._ABSENT
 
-    def record(self, msg_id: int, response) -> None:
+    def record(self, msg_id: int, response) -> int:
+        """Record ``msg_id``'s first response; returns the number of older
+        ids the bound evicted to make room (eviction pressure)."""
         if msg_id in self._responses:
             self._responses[msg_id] = response
-            return
+            return 0
         self._order.append(msg_id)
         self._responses[msg_id] = response
+        evicted = 0
         while len(self._order) > self.capacity:
             self._responses.pop(self._order.popleft(), None)
+            evicted += 1
+        self.evictions += evicted
+        self.high_water = max(self.high_water, len(self._order))
+        return evicted
 
 
 class BoundedIdSet:

@@ -454,6 +454,14 @@ def test_node_seen_window_bounds_memory_under_load():
     c.write_objects([(f"o{i}", rng.bytes(2048)) for i in range(40)])
     for node in c.nodes.values():
         assert len(node.seen) <= 16
+    # an undersized window shows visible eviction pressure — the counter the
+    # sizing study reads (zero at default capacity, see the chaos test)
+    assert c.stats.seen_evictions > 0
+    assert c.stats.seen_high_water == 16
+    pressured = [n for n in c.nodes.values() if n.stats.seen_evictions > 0]
+    assert pressured and all(
+        n.stats.seen_evictions == n.seen.evictions for n in c.nodes.values()
+    )
 
 
 # ------------------------------------------------------- chaos convergence
@@ -507,6 +515,11 @@ def test_chaos_schedule_converges_to_reliable_oracle(chaos_seed):
         f"chaos seed {chaos_seed} diverged from the reliable oracle "
         f"(repro: CHAOS_SEED_BASE={chaos_seed} CHAOS_SCHEDULES=1)"
     )
+    # Seen-window eviction pressure must be ZERO at default sizing: a chaos
+    # schedule never pushes in-flight depth anywhere near the 1024-id bound
+    # (if it did, a late duplicate could slip past dedup and re-apply).
+    assert c.stats.seen_evictions == 0
+    assert 0 < c.stats.seen_high_water < 1024 // 4
     # GC reachability: another full GC cycle removes nothing on either side
     before = cluster_state(c)
     settle(oracle), settle(c)

@@ -1,0 +1,690 @@
+"""Message-driven recovery subsystem: digest wire model, digest-diff
+repair (the scrub contract), the cluster-wide refcount audit, and the
+split-brain convergence property.
+
+Acceptance invariant (ISSUE 4): for seeded schedules, partition ->
+divergent writes on both sides -> heal -> recovery round (digest repair +
+refcount audit + GC) yields cluster state byte-identical to a
+never-partitioned oracle — including a schedule where a ``TxnCancel`` is
+fully lost after an applied-but-unacked op (the PR 3 residual leak).
+Recovery traffic is ordinary transport traffic: it appears in
+``net_bytes``/``EdgeStats``, is subject to delivery policies, and its
+mutating messages ride the per-node seen-windows.
+
+The split-brain sweep is seeded and parametrized; widen it with
+``RECOVERY_SCHEDULES=100 pytest tests/test_recovery.py -k split_brain``
+and reproduce a nightly failure with ``RECOVERY_SEED_BASE=<seed>
+RECOVERY_SCHEDULES=1`` (the failing parametrization id IS the seed).
+"""
+
+import inspect
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CONTROL_MSG_BYTES,
+    DIGEST_ENTRY_BYTES,
+    DIGEST_GROUP_BYTES,
+    OMAP_DIGEST_ENTRY_BYTES,
+    RECIPE_REF_BYTES,
+    ChunkOpBatch,
+    ChunkingSpec,
+    CITEntry,
+    DecrefBatch,
+    DedupCluster,
+    DigestReply,
+    DigestRequest,
+    RecoveryRound,
+    RefAudit,
+    RepairChunk,
+    TxnCancel,
+    WriteError,
+    chaos,
+    duplicate,
+    partition,
+    place,
+    reliable,
+    sha256_fp,
+)
+
+CH = ChunkingSpec("fixed", 1024)
+
+
+def pytest_generate_tests(metafunc):
+    """Split-brain schedules are seeded: the fast path runs a fixed set of
+    20, the nightly recovery-convergence sweep widens it via
+    RECOVERY_SCHEDULES / RECOVERY_SEED_BASE."""
+    if "split_seed" in metafunc.fixturenames:
+        base = int(os.environ.get("RECOVERY_SEED_BASE", "0"))
+        n = int(os.environ.get("RECOVERY_SCHEDULES", "20"))
+        metafunc.parametrize("split_seed", range(base, base + n))
+
+
+# ----------------------------------------------------------------- helpers
+def cluster_state(c):
+    state = {}
+    for nid, n in c.nodes.items():
+        cit = {fp: (e.refcount, e.flag, e.size) for fp, e in n.shard.cit.items()}
+        omap = {
+            name: (e.object_fp, tuple(e.chunk_fps), e.size)
+            for name, e in n.shard.omap.items()
+        }
+        state[nid] = (cit, omap, dict(n.chunk_store))
+    return state
+
+
+def settle(c, ticks: int = 40, gc_rounds: int = 3):
+    c.tick(ticks)
+    for _ in range(gc_rounds):
+        c.run_gc()
+        c.tick(c.nodes[next(iter(c.nodes))].gc.threshold + 1)
+    c.run_gc()
+
+
+def total_refs(c):
+    return sum(e.refcount for n in c.nodes.values() for e in n.shard.cit.values())
+
+
+def applied_unacked_lost_cancel(src, dst, msg, now):
+    """The PR 3 residual-leak schedule: every chunk batch APPLIES but its
+    ack is lost, and the compensating TxnCancel is itself fully lost — the
+    refs it took leak until a refcount audit reconciles them."""
+    if isinstance(msg, ChunkOpBatch):
+        return ("ack_drop", 0)
+    if isinstance(msg, TxnCancel):
+        return ("drop", 0)
+    return ("deliver", 0)
+
+
+# --------------------------------------------------------- digest wire model
+def test_recovery_message_wire_model():
+    fp = sha256_fp(b"z" * 64)
+    req = DigestRequest(kind="chunks")
+    summary = DigestReply(kind="chunks", groups={("a", "b"): (2, 123)}, entries={})
+    assert req.response_payload_bytes(summary) == DIGEST_GROUP_BYTES
+    assert req.wire_bytes("oss1", summary) == CONTROL_MSG_BYTES + DIGEST_GROUP_BYTES
+    detail = DigestReply(
+        kind="chunks", groups={}, entries={fp: (True, True, 1, 1, 100)}
+    )
+    assert req.response_payload_bytes(detail) == DIGEST_ENTRY_BYTES
+    recipes = DigestReply(kind="recipes", groups={}, entries={fp: 3})
+    assert (
+        DigestRequest(kind="recipes").response_payload_bytes(recipes)
+        == RECIPE_REF_BYTES
+    )
+    omap_detail = DigestReply(kind="omap", groups={}, entries={"name": fp})
+    assert (
+        DigestRequest(kind="omap").response_payload_bytes(omap_detail)
+        == OMAP_DIGEST_ENTRY_BYTES
+    )
+    # repair moves pay for the bytes they ship; metadata-only repairs and
+    # audit corrections are control-only
+    assert RepairChunk(fp, b"x" * 100, None).payload_bytes("oss1") == 100
+    assert RepairChunk(fp, None, CITEntry(1, 1, 100)).payload_bytes("oss1") == 0
+    audit = RefAudit(((fp, 2),))
+    assert audit.wire_bytes("oss1") == CONTROL_MSG_BYTES
+    assert audit.lookups() == 1
+
+
+def test_digest_probes_stay_out_of_seen_window():
+    """DigestRequest is a read: recording probes would let recovery
+    traffic evict mutating message ids from the bounded windows."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    c.write_object("a", np.random.default_rng(0).bytes(4096))
+    c.tick(3)
+    filled = {nid: len(n.seen) for nid, n in c.nodes.items()}
+    assert c.scrub() == 0  # healthy cluster: digests agree, no repairs
+    assert c.transport.msgs_by_type["digest_request"] >= 3
+    for nid, n in c.nodes.items():
+        assert len(n.seen) == filled[nid]
+
+
+def test_recovery_traffic_is_transport_traffic():
+    """Digest probes and repairs are wire traffic: counted in net_bytes
+    and visible per edge — nothing about recovery is free or omniscient."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    c.write_object("a", np.random.default_rng(1).bytes(8192))
+    c.tick(3)
+    victim = c.chunk_targets(sha256_fp(c.read_object("a")[:1024]))[0]
+    c.nodes[victim].chunk_store.clear()
+    c.nodes[victim].shard.cit.clear()
+    before = c.stats.net_bytes
+    restored = c.scrub()
+    assert restored > 0
+    assert c.stats.net_bytes > before
+    assert c.transport.msgs_by_type["digest_request"] > 0
+    assert c.transport.msgs_by_type["repair_chunk"] >= restored
+    probe_edges = [e for (s, _), e in c.transport.edges.items() if s == "recovery"]
+    assert probe_edges and sum(e.msgs for e in probe_edges) > 0
+    repair_edges = [
+        e
+        for (s, d), e in c.transport.edges.items()
+        if s in c.nodes and d in c.nodes and s != d and e.payload_bytes
+    ]
+    assert repair_edges, "repair bytes must flow on node-to-node edges"
+
+
+def test_cluster_scrub_has_no_direct_state_reads():
+    """The acceptance criterion, structurally: cluster.py's scrub/repair
+    paths contain zero direct cross-node state reads — they delegate to
+    the message-driven recovery subsystem."""
+    for fn in (DedupCluster.scrub, DedupCluster.recover, DedupCluster.set_map):
+        src = inspect.getsource(fn)
+        for forbidden in ("chunk_store", ".shard", ".cit", "cit_lookup"):
+            assert forbidden not in src, (fn.__name__, forbidden)
+
+
+# ------------------------------------------------------- digest-diff repair
+def test_scrub_restores_bytes_and_cit_after_disk_loss():
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    rng = np.random.default_rng(2)
+    objs = {f"o{i}": rng.bytes(4096) for i in range(8)}
+    c.write_objects(list(objs.items()))
+    c.tick(3)
+    victim = "oss1"
+    c.nodes[victim].chunk_store.clear()
+    c.nodes[victim].shard.cit.clear()
+    restored = c.scrub()
+    assert restored > 0
+    c.tick(2)
+    for nid, node in c.nodes.items():
+        for fp in node.chunk_store:
+            for t in c.chunk_targets(fp):
+                assert fp in c.nodes[t].chunk_store
+                assert c.nodes[t].shard.cit_lookup(fp) is not None
+    for name, data in objs.items():
+        assert c.read_object(name) == data
+
+
+def test_repair_source_prefers_holder_with_cit_entry():
+    """Regression for the old scrub's have[0] bug: it snapshotted the CIT
+    entry from the first byte-holder even when that holder had no entry
+    while another did. The digest path picks per-resource sources: bytes
+    from a byte-holder, the CIT snapshot from a holder that HAS the entry."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    blob = np.random.default_rng(3).bytes(1024)  # exactly one chunk
+    c.write_object("a", blob)
+    c.tick(3)
+    fp = sha256_fp(blob)
+    t1, t2 = c.chunk_targets(fp)
+    # partial loss, split across the replica set: t1 keeps only the bytes,
+    # t2 keeps only the CIT entry
+    c.nodes[t1].shard.cit_remove(fp)
+    del c.nodes[t2].chunk_store[fp]
+    restored = c.scrub()
+    assert restored == 1  # t2's byte copy
+    e1 = c.nodes[t1].shard.cit_lookup(fp)
+    assert e1 is not None and e1.refcount == 1, (
+        "t1 must adopt the CIT entry from the holder that has it"
+    )
+    assert fp in c.nodes[t2].chunk_store
+    assert c.read_object("a") == blob
+    # and the audit agrees the repaired state is exact
+    rep = RecoveryRound(c)
+    rep.audit_refcounts()
+    assert rep.report.corrections == 0
+
+
+def test_recovery_mutating_messages_ride_the_seen_window():
+    """RepairChunk / RefAudit / audit DecrefBatch delivered twice must be
+    state no-ops the second time: a recovery round under duplicate(1.0)
+    converges to the same state as a reliable one."""
+
+    def build():
+        c = DedupCluster.create(3, replicas=2, chunking=CH)
+        rng = np.random.default_rng(4)
+        c.transport.policy = applied_unacked_lost_cancel
+        for i in range(2):  # leaked refs -> audit decref work
+            with pytest.raises(WriteError):
+                c.write_object(f"leak{i}", rng.bytes(3072))
+        c.transport.policy = reliable()
+        c.write_objects([(f"o{i}", rng.bytes(3072)) for i in range(4)])
+        c.tick(3)
+        victim = sorted(c.nodes)[0]  # missing replica -> RepairChunk work
+        c.nodes[victim].chunk_store.clear()
+        c.nodes[victim].shard.cit.clear()
+        return c
+
+    ref, dup = build(), build()
+    ref.recover()
+    dup.transport.policy = duplicate(
+        1.0, seed=5, only=(RepairChunk, RefAudit, DecrefBatch)
+    )
+    dup.transport.retry_budget = 2
+    report = dup.recover()
+    dup.transport.policy = reliable()
+    dup.transport.retry_budget = 0
+    assert report.chunks_repaired > 0 and report.refs_over > 0
+    assert dup.transport.late_deliveries > 0
+    assert sum(n.stats.dup_msgs_suppressed for n in dup.nodes.values()) > 0
+    settle(ref), settle(dup)
+    assert cluster_state(dup) == cluster_state(ref)
+
+
+# ----------------------------------------------------------- refcount audit
+def test_audit_reclaims_lost_txn_cancel_leak():
+    """THE residual window PR 3 documented: op applied, ack lost, and the
+    conditional TxnCancel itself fully lost. The leaked references are
+    invisible to GC (refcount > 0) until the audit walks the recipes and
+    proves no object accounts for them."""
+    oracle = DedupCluster.create(3, chunking=CH)
+    c = DedupCluster.create(3, chunking=CH)
+    data = np.random.default_rng(13).bytes(4096)
+    c.transport.policy = applied_unacked_lost_cancel
+    with pytest.raises(WriteError):
+        c.write_object("x", data)
+    assert total_refs(c) > 0, "the leak: applied refs, no recipe, no cancel"
+    assert all(not n.shard.omap for n in c.nodes.values())
+    c.transport.policy = reliable()
+    # the client retries; the leaked entries double-count as dedup hits
+    c.write_object("x", data)
+    oracle.write_object("x", data)
+    settle(c), settle(oracle)
+    assert cluster_state(c) != cluster_state(oracle), (
+        "without the audit the leak persists forever (GC cannot touch "
+        "refcount>0 entries)"
+    )
+    report = c.recover()
+    assert report.refs_over > 0
+    settle(c), settle(oracle)
+    assert cluster_state(c) == cluster_state(oracle)
+    assert c.read_object("x") == data
+
+
+def test_audit_decref_skips_gc_aging_via_cross_match_feed():
+    """References the audit proved unreferenced enter the GC held set
+    pre-aged: the next sweep reclaims them with NO aging wait (the recipe
+    walk is the cross-match evidence), and still-queued async flips for
+    them are purged."""
+    c = DedupCluster.create(3, chunking=CH)
+    c.transport.policy = applied_unacked_lost_cancel
+    with pytest.raises(WriteError):
+        c.write_object("leak", np.random.default_rng(14).bytes(4096))
+    c.transport.policy = reliable()
+    leaked = total_refs(c)
+    assert leaked > 0
+    r = RecoveryRound(c)
+    r.collect_digests()
+    r.repair_chunks()
+    r.audit_refcounts()
+    assert r.report.refs_over == leaked
+    assert sum(n.cm.flips_purged for n in c.nodes.values()) > 0
+    # ONE sweep, zero ticks of aging: audit-fed entries collect immediately
+    removed = sum(len(fps) for fps in c.run_gc().values())
+    assert removed > 0
+    assert sum(n.gc.audit_fed for n in c.nodes.values()) == removed
+    assert total_refs(c) == 0
+    assert all(not n.chunk_store for n in c.nodes.values())
+
+
+def test_audit_restores_missing_refs_and_flags():
+    """A replica that missed increfs (and whose flag flip was lost) is
+    raised back to the recipe-proven count through RefAudit."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    blob = np.random.default_rng(15).bytes(1024)
+    c.write_object("a", blob)
+    c.write_object("b", blob)  # shared chunk: refcount 2 on both replicas
+    c.tick(3)
+    fp = sha256_fp(blob)
+    t1, _ = c.chunk_targets(fp)
+    from repro.core import INVALID
+
+    c.nodes[t1].shard.cit_lookup(fp).refcount = 0  # lost both increfs
+    c.nodes[t1].shard.cit_set_flag(fp, INVALID, c.now)  # and the flag
+    rep = c.recover()
+    assert rep.refs_under == 2
+    e = c.nodes[t1].shard.cit_lookup(fp)
+    assert e.refcount == 2 and e.is_valid()
+    assert c.read_object("a") == blob
+
+
+def test_audit_skipped_when_a_recipe_digest_is_lost():
+    """Safety gate: partial recipe knowledge would release references
+    belonging to the unheard node's objects — the audit refuses to run."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    c.write_objects(
+        [(f"o{i}", np.random.default_rng(16).bytes(3072)) for i in range(4)]
+    )
+    c.tick(3)
+    refs = total_refs(c)
+
+    def drop_recipe_probes(src, dst, msg, now):
+        if isinstance(msg, DigestRequest) and msg.kind == "recipes":
+            return ("drop", 0)
+        return ("deliver", 0)
+
+    c.transport.policy = drop_recipe_probes
+    r = RecoveryRound(c)
+    assert r.audit_refcounts() == 0
+    assert r.report.audit_skipped
+    assert r.report.unreachable >= 1
+    assert total_refs(c) == refs, "a skipped audit must correct nothing"
+
+
+# ------------------------------------------------ rebalance-during-recovery
+def test_rebalance_during_recovery_round():
+    """set_map() landing between digest collection and repair: placement
+    is re-resolved at send time, so a migrated chunk is neither repaired
+    to its stale target nor double-counted, and a subsequent audit (fresh
+    collection) sees a fixed point."""
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    rng = np.random.default_rng(17)
+    objs = {f"o{i}": rng.bytes(4096) for i in range(10)}
+    c.write_objects(list(objs.items()))
+    c.tick(3)
+    victim = "oss2"
+    c.nodes[victim].chunk_store.clear()
+    c.nodes[victim].shard.cit.clear()
+    r = RecoveryRound(c)
+    r.collect_digests()          # digests describe the 4-node placement
+    c.add_node()                 # topology change + migration IN FLIGHT
+    r.repair_chunks()            # stale digests, fresh placement
+    c.tick(2)
+    # nothing repaired off-placement, nothing double-stored
+    for nid, node in c.nodes.items():
+        for fp in node.chunk_store:
+            assert nid in place(fp, c.cmap), f"stray copy of {fp} on {nid}"
+        for fp in node.shard.cit:
+            assert nid in place(fp, c.cmap), f"stray CIT entry {fp} on {nid}"
+    # a FRESH full round finishes the job and reaches a fixed point
+    c.recover()
+    rep2 = c.recover()
+    assert rep2.chunks_repaired == 0
+    assert rep2.corrections == 0
+    assert rep2.omap_repaired == 0
+    for name, data in objs.items():
+        assert c.read_object(name) == data
+
+
+def test_omap_authority_is_version_not_placement_order():
+    """A primary that was down across a replace holds the OLD version;
+    placement-order authority would resurrect it cluster-wide. The commit
+    version (bumped by every replace) elects the survivor instead."""
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    old = np.random.default_rng(41).bytes(2048)
+    new = np.random.default_rng(42).bytes(2048)
+    c.write_object("victim", old)
+    c.tick(3)
+    from repro.core import name_fp
+
+    primary = place(name_fp("victim"), c.cmap)[0]
+    c.crash_node(primary)
+    c.write_object("victim", new)  # commits on the survivors, version 2
+    c.tick(3)
+    c.restart_node(primary)        # stale version-1 replica rejoins
+    report = c.recover()
+    assert report.omap_repaired >= 1
+    settle(c)
+    assert c.read_object("victim") == new, (
+        "recovery must never roll back a committed replace"
+    )
+    for nid in place(name_fp("victim"), c.cmap):
+        e = c.nodes[nid].shard.omap_get("victim")
+        assert e is not None and e.version == 2
+
+
+def test_audit_skipped_when_omap_repair_lost_probes():
+    """The symmetric safety gate: a lost OMAP digest probe means a replica
+    that silently missed commits may be elected recipe owner with
+    incomplete recipes — the round's audit must not run."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    c.write_objects(
+        [(f"o{i}", np.random.default_rng(45).bytes(3072)) for i in range(4)]
+    )
+    c.tick(3)
+    refs = total_refs(c)
+
+    def drop_omap_probes(src, dst, msg, now):
+        if isinstance(msg, DigestRequest) and msg.kind == "omap":
+            return ("drop", 0)
+        return ("deliver", 0)
+
+    c.transport.policy = drop_omap_probes
+    report = c.recover()
+    assert report.audit_skipped
+    assert total_refs(c) == refs, "a gated audit must correct nothing"
+    # with the network healthy again the next round audits normally
+    c.transport.policy = reliable()
+    report = c.recover()
+    assert not report.audit_skipped
+
+
+def test_delete_recreate_beats_stale_replica_version():
+    """Versions are the committing transaction's cluster-monotonic id, so
+    a delete+recreate always outranks a stale replica's pre-delete entry —
+    a per-name counter would restart at 1 and lose to it."""
+    from repro.core import name_fp
+
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    rng = np.random.default_rng(46)
+    v1, v2, fresh = rng.bytes(2048), rng.bytes(2048), rng.bytes(2048)
+    c.write_object("x", v1)
+    c.write_object("x", v2)  # stale replicas will hold this higher-txn entry
+    c.tick(3)
+    primary = place(name_fp("x"), c.cmap)[0]
+    c.crash_node(primary)    # keeps the v2 entry through the delete+recreate
+    c.delete_object("x")
+    c.write_object("x", fresh)
+    c.tick(3)
+    c.restart_node(primary)
+    c.recover()
+    settle(c)
+    assert c.read_object("x") == fresh, (
+        "a stale pre-delete entry must never outrank the recreated one"
+    )
+
+
+def test_failed_replace_commit_keeps_previous_version():
+    """A replace failing at (or after) the before_omap point must leave
+    the previous version fully readable: old refs are released only after
+    the commit record is written."""
+    from repro.core import TransactionAbort
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    old = np.random.default_rng(47).bytes(2048)
+    c.write_object("x", old)
+    c.tick(3)
+    refs_before = total_refs(c)
+
+    def abort_commit(event, ctx):
+        if event == "before_omap" and ctx.get("name") == "x":
+            raise TransactionAbort("injected at commit")
+
+    c.fault_injector = abort_commit
+    with pytest.raises(WriteError):
+        c.write_object("x", np.random.default_rng(48).bytes(2048))
+    c.fault_injector = None
+    assert c.read_object("x") == old
+    settle(c)  # the failed attempt's chunks age out as garbage
+    assert c.read_object("x") == old
+    assert total_refs(c) == refs_before
+
+
+def test_rebalance_keeps_local_copy_until_a_move_is_acked():
+    """A lossy policy that eats every MigrateChunk must not let set_map
+    destroy the last surviving copy: the source retains it (stray holder)
+    and the digest repair round re-ships it once the network heals."""
+    from repro.core import MigrateChunk, OmapPut
+
+    c = DedupCluster.create(3, replicas=1, chunking=CH)
+    rng = np.random.default_rng(43)
+    objs = {f"o{i}": rng.bytes(3072) for i in range(6)}
+    c.write_objects(list(objs.items()))
+    c.tick(3)
+
+    def eat_moves(src, dst, msg, now):
+        if isinstance(msg, (MigrateChunk, OmapPut)) and getattr(msg, "migrate", True):
+            return ("drop", 0)
+        return ("deliver", 0)
+
+    c.transport.policy = eat_moves
+    c.add_node()  # every move is lost — nothing may be destroyed
+    total_chunks = sum(len(n.chunk_store) for n in c.nodes.values())
+    assert total_chunks > 0
+    c.transport.policy = reliable()
+    report = c.recover()  # stray holders re-ship to the new placement
+    assert report.chunks_repaired > 0
+    assert report.omap_repaired > 0
+    c.tick(2)
+    for name, data in objs.items():
+        assert c.read_object(name) == data
+
+
+def test_explicit_zero_retry_budget_wins_over_injected_transport():
+    """retry_budget=0 / ack_timeout=2 passed explicitly must override an
+    injected transport's settings; omitting them inherits the transport's."""
+    from repro.core import Transport
+    from repro.core.node import StorageNode
+
+    nodes = {f"oss{i}": StorageNode(f"oss{i}") for i in range(2)}
+    from repro.core import ClusterMap
+
+    cmap = ClusterMap(epoch=1, nodes=tuple(nodes), replicas=1)
+    t = Transport(handlers=nodes, retry_budget=3, ack_timeout=7)
+    inherited = DedupCluster(cmap=cmap, nodes=nodes, transport=t, chunking=CH)
+    assert inherited.retry_budget == 3 and inherited.ack_timeout == 7
+    t2 = Transport(handlers=nodes, retry_budget=3, ack_timeout=7)
+    explicit = DedupCluster(
+        cmap=cmap, nodes=nodes, transport=t2, chunking=CH,
+        retry_budget=0, ack_timeout=2,
+    )
+    assert explicit.retry_budget == 0 and explicit.ack_timeout == 2
+    assert t2.retry_budget == 0 and t2.ack_timeout == 2
+
+
+def test_unrecoverable_bytes_still_repairs_surviving_cit_entries():
+    """Bytes lost on every holder: the byte copy is unrecoverable, but a
+    surviving CIT entry still propagates so the group's digests converge
+    (otherwise every future round re-expands the group into details)."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    blob = np.random.default_rng(44).bytes(1024)
+    c.write_object("a", blob)
+    c.tick(3)
+    fp = sha256_fp(blob)
+    t1, t2 = c.chunk_targets(fp)
+    del c.nodes[t1].chunk_store[fp]   # bytes gone everywhere
+    del c.nodes[t2].chunk_store[fp]
+    c.nodes[t2].shard.cit_remove(fp)  # entry survives only on t1
+    r = RecoveryRound(c)
+    r.collect_digests()
+    r.repair_chunks()
+    assert r.report.unrecoverable > 0
+    assert c.nodes[t2].shard.cit_lookup(fp) is not None, (
+        "the surviving CIT entry must still reach the other target"
+    )
+    # with both replicas digesting identically now, the next round is clean
+    r2 = RecoveryRound(c)
+    r2.collect_digests()
+    assert r2.repair_chunks() == 0
+    assert r2.report.groups_mismatched == 0
+
+
+# ----------------------------------------------------- simtime link models
+def test_per_edge_link_model_charges_the_straggler_nic():
+    """``modeled_time_clusterwide`` defaults to a max-over-links network
+    term (the straggler NIC from EdgeStats) instead of pretending every
+    byte spreads uniformly over n NICs; the legacy model stays behind the
+    ``link_model`` flag and both are pinned in the bench JSON."""
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+    from simtime import DEFAULT, modeled_time_clusterwide, straggler_nic_seconds
+
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    rng = np.random.default_rng(23)
+    c.write_objects([(f"s{i}", rng.bytes(8192)) for i in range(8)])
+    for i in range(4):
+        c.read_object(f"s{i}")
+    # the hottest NIC carries at least its fair share of the aggregate
+    n = len(c.nodes)
+    assert straggler_nic_seconds(c) >= c.stats.net_bytes / (
+        n * DEFAULT.net_Bps_per_node
+    )
+    uniform = modeled_time_clusterwide(c, link_model="uniform")
+    per_edge = modeled_time_clusterwide(c, link_model="per_edge")
+    assert per_edge >= uniform  # a max can never beat the uniform split
+    assert modeled_time_clusterwide(c) == per_edge  # per-edge is the default
+    with pytest.raises(ValueError):
+        modeled_time_clusterwide(c, link_model="nope")
+
+
+# ------------------------------------------------- split-brain convergence
+def _run_split_brain(split_seed: int) -> None:
+    rng = np.random.default_rng(5000 + split_seed)
+    oracle = DedupCluster.create(4, replicas=2, chunking=CH)
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+
+    base = [(f"base{i}", rng.bytes(3072)) for i in range(4)]
+    for cl in (oracle, c):
+        cl.write_objects(list(base))
+        cl.tick(3)
+
+    nodes = sorted(c.nodes)
+    k = int(rng.integers(1, len(nodes)))
+    side_a = tuple(sorted(rng.choice(nodes, size=k, replace=False)))
+    side_b = tuple(n for n in nodes if n not in side_a)
+
+    # Divergent writes on both sides of the partition: fresh names AND
+    # replaces of pre-partition names (a committed replace leaves the
+    # cross-side OMAP replica stale and its old chunk refs leaked there).
+    items = [(f"w{i}", rng.bytes(1024 * int(rng.integers(2, 5)))) for i in range(8)]
+    items += [("base0", rng.bytes(3072)), ("base2", rng.bytes(3072))]
+
+    c.transport.policy = partition(side_a, side_b)
+    failed = []
+    for name, data in items:
+        try:
+            c.write_object(name, data)
+        except WriteError:
+            failed.append((name, data))
+    for name, data in items:
+        oracle.write_object(name, data)
+    assert c.transport.dropped > 0, "the partition must sever something"
+
+    # heal; the client retries what failed (idempotent writes: exact)
+    c.transport.policy = reliable()
+    for name, data in failed:
+        c.write_object(name, data)
+
+    if split_seed % 4 == 1:
+        # fold in the PR 3 residual leak: applied-but-unacked op whose
+        # TxnCancel is fully lost — recovery must reconcile this too
+        c.transport.policy = applied_unacked_lost_cancel
+        leak_item = ("leaky", rng.bytes(3072))
+        with pytest.raises(WriteError):
+            c.write_object(*leak_item)
+        c.transport.policy = reliable()
+        c.write_object(*leak_item)
+        oracle.write_object(*leak_item)
+
+    if split_seed % 2 == 1:
+        # the recovery round itself runs under a PR 3 chaos policy
+        c.transport.policy = chaos(
+            seed=split_seed, p_drop=0.05, p_dup=0.1, p_reorder=0.05, p_ack_drop=0.08
+        )
+        c.transport.retry_budget = 12
+    report = c.recover()
+    c.transport.policy = reliable()
+    c.transport.retry_budget = 0
+
+    # recovery traffic is accounted traffic
+    assert c.transport.msgs_by_type.get("digest_request", 0) > 0
+    assert any(s == "recovery" for (s, _) in c.transport.edges)
+    assert not report.audit_skipped
+
+    settle(oracle), settle(c)
+    assert cluster_state(c) == cluster_state(oracle), (
+        f"split-brain seed {split_seed} diverged from the never-partitioned "
+        f"oracle (repro: RECOVERY_SEED_BASE={split_seed} RECOVERY_SCHEDULES=1)"
+    )
+    # zero seen-window pressure at default sizing, even through recovery
+    assert c.stats.seen_evictions == 0
+    for name, data in dict(items).items():
+        assert c.read_object(name) == data
+
+
+def test_split_brain_recovery_converges_to_oracle(split_seed):
+    _run_split_brain(split_seed)

@@ -100,15 +100,22 @@ def test_stats_parity_with_pre_transport_accounting():
     c.add_node()
     c.scrub()
     c.tick(2)
-    # payload parity: net_bytes minus the at-least-once ack bytes is the
-    # pre-refactor exact payload accounting; the ack surcharge is exactly
-    # one ACK_MSG_BYTES (=CONTROL_MSG_BYTES) per delivery.
-    assert c.stats.net_bytes - c.stats.ack_bytes == 127200   # pre-refactor exact
+    # payload parity: net_bytes minus the at-least-once ack bytes minus the
+    # recovery digest traffic is the pre-refactor exact payload accounting;
+    # the ack surcharge is exactly one ACK_MSG_BYTES (=CONTROL_MSG_BYTES)
+    # per delivery. Scrub is digest-driven now: one summary DigestRequest
+    # per live node (6), whose replies carry 40 per-group digest records
+    # (DIGEST_GROUP_BYTES each) — fully replicated cluster, so no group
+    # mismatches, no detail listings, no RepairChunk traffic.
+    assert c.transport.msgs_by_type["digest_request"] == 6
+    assert c.transport.msgs_by_type.get("repair_chunk", 0) == 0
+    digest_bytes = 40 * 16
+    assert c.stats.net_bytes - c.stats.ack_bytes - digest_bytes == 127200
     assert c.stats.ack_bytes == 64 * c.transport.deliveries
-    assert c.stats.net_bytes == 136672        # 127200 + 64 * 148 deliveries
+    assert c.stats.net_bytes == 137696        # 127200 + 640 + 64 * 154 deliveries
     assert c.stats.lookup_unicasts == 76      # pre-refactor exact
     assert c.stats.lookup_broadcasts == 0
-    assert c.stats.control_msgs == 148        # transport message count
+    assert c.stats.control_msgs == 154        # transport message count (+6 digests)
     assert c.stats.retransmits == 0           # reliable policy: no retries
     assert c.stats.rebalance_bytes_moved == 12079
     assert c.stats.rebalance_chunks_moved == 13
