@@ -64,6 +64,20 @@ DETERMINISTIC_COLUMNS = [
     ("recovery", "recovery_msgs"),
     ("recovery", "modeled_time_uniform_s"),
     ("recovery", "modeled_time_per_edge_s"),
+    # always-on recovery: tombstone traffic and the incremental digest
+    # scope (groups re-digested vs skipped) are exact functions of the
+    # seeded workload — drift means the dirty-tracking or tombstone wire
+    # shape changed
+    ("always_on", "n_objects"),
+    ("always_on", "cold_groups_digested"),
+    ("always_on", "incr_groups_digested"),
+    ("always_on", "incr_groups_skipped"),
+    ("always_on", "incr_round_net_bytes"),
+    ("always_on", "incr_round_msgs"),
+    ("always_on", "tombstone_commit_msgs"),
+    ("always_on", "tombstone_reap_msgs"),
+    ("always_on", "tombstones_reaped"),
+    ("always_on", "audit_deferred"),
 ]
 
 

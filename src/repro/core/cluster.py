@@ -230,6 +230,7 @@ class DedupCluster:
         c = cls(cmap=cmap, chunking=(chunking or ChunkingSpec()).normalized(), **kw)
         for nid in ids:
             c.nodes[nid] = StorageNode(nid)
+            c.nodes[nid].set_cmap(cmap, 0)
         if policy is not None:
             c.transport.policy = policy
         return c
@@ -571,6 +572,7 @@ class DedupCluster:
         exc: MessageDropped,
         fps: tuple = (),
         omap_name: str | None = None,
+        undelete_version: int = 0,
     ) -> None:
         """Resolve the at-least-once ambiguity after a send exhausted its
         retry budget: when ``maybe_applied`` the op may have landed without
@@ -584,7 +586,16 @@ class DedupCluster:
             return  # no attempt reached the receiver: nothing ever applied
         try:
             self.transport.send(
-                src, dst, TxnCancel(exc.msg_id, tuple(fps), omap_name), self.now
+                src,
+                dst,
+                TxnCancel(
+                    exc.msg_id,
+                    tuple(fps),
+                    omap_name,
+                    undelete=undelete_version > 0,
+                    ref_version=undelete_version,
+                ),
+                self.now,
             )
         except (MessageDropped, NodeDown):
             pass
@@ -841,7 +852,9 @@ class DedupCluster:
                 lost = True
                 continue
             if e is not None:
-                return e
+                # A tombstone answers the probe (the name is known-deleted,
+                # no further replica need be asked) but reads as absence.
+                return None if e.deleted else e
         if strict and lost:
             raise WriteError(f"OMAP lookup for {name!r} lost in transit")
         return None
@@ -859,22 +872,47 @@ class DedupCluster:
 
     # ---------------------------------------------------------------- delete
     def delete_object(self, name: str, _src: str = "client") -> bool:
-        entry = self._omap_lookup(name, src=_src)
+        """Tombstone-first delete, mirroring the write path's replace
+        hardening: the versioned tombstone is committed to the OMAP
+        replicas FIRST (>=1 ack, like ``_commit_omap``) and the recipe's
+        chunk refs are released strictly AFTER. A mid-delete failure
+        therefore leaves the name either fully readable (the commit never
+        landed; a maybe-applied tombstone is conditionally undeleted
+        receiver-side) or fully tombstoned with at worst leaked refcounts
+        that the cluster-wide audit reclaims — never a readable recipe
+        whose refs were half-released. Primary-routed like the write path,
+        so a node<->node partition severs tombstone replication exactly as
+        it severs commit replication; recovery then converges the
+        survivors by commit version."""
+        omap_nodes = self._live(self.omap_targets(name))
+        if not omap_nodes:
+            raise WriteError(f"no live OMAP target for {name!r}")
+        primary = omap_nodes[0]
+        entry = self._omap_lookup(name, src=primary)
         if entry is None:
             return False
-        self._delete_entry(entry, src=_src)
-        return True
-
-    def _delete_entry(self, entry: OMAPEntry, src: str) -> None:
-        """Remove an already-fetched OMAP entry and release its chunk refs
-        (the delete path; a replace releases refs only, the new OmapPut
-        overwrites the record in place)."""
-        for t in self._live(self.omap_targets(entry.name)):
+        self._txn_counter += 1
+        txn = self._txn_counter
+        self._fault("before_tombstone", name=name, txn=txn)
+        committed = False
+        unconfirmed: list[tuple[str, MessageDropped]] = []
+        for t in omap_nodes:
             try:
-                self.transport.send(src, t, OmapDelete(entry.name), self.now)
-            except (MessageDropped, NodeDown):
+                self.transport.send(primary, t, OmapDelete(name, txn), self.now)
+                committed = True
+            except MessageDropped as e:
+                unconfirmed.append((t, e))
+            except NodeDown:
                 pass
-        self._release_entry_refs(entry, src)
+        if not committed:
+            for t, e in unconfirmed:
+                self._cancel_unconfirmed(
+                    primary, t, e, omap_name=name, undelete_version=txn
+                )
+            raise WriteError(f"delete {name!r}: no OMAP replica acked the tombstone")
+        self._fault("before_delete_decref", name=name, txn=txn)
+        self._release_entry_refs(entry, src=primary)
+        return True
 
     def _release_entry_refs(self, entry: OMAPEntry, src: str) -> None:
         """Release an entry's chunk refs, one DecrefBatch per node. The
@@ -910,6 +948,8 @@ class DedupCluster:
             if nid not in self.nodes:
                 self.nodes[nid] = StorageNode(nid)
         self.cmap = new_map
+        for n in self.nodes.values():
+            n.set_cmap(new_map, self.now)
         rebalance(self)
 
     def add_node(self, weight: float = 1.0) -> str:

@@ -66,10 +66,14 @@ class ConsistencyManager:
         due = now + self.async_delay
         self.queue.extend(PendingFlip(fp, due, txn_id) for fp in fps)
 
-    def drain(self, shard: DMShard, now: int) -> int:
+    def drain(self, shard: DMShard, now: int, on_flip=None) -> int:
         """Apply all due flips, coalesced into one shard pass: duplicate
         fingerprints registered by several writes flip once. Returns the
-        number of flips applied."""
+        number of flips applied. ``on_flip(fp)`` is invoked per applied
+        flip — the node hooks it to bump the fingerprint's placement-group
+        dirty epoch, so an always-on incremental repair round that starts
+        between a write and its async flip sees the group as still
+        settling instead of silently clean."""
         due = [p for p in self.queue if p.due <= now]
         self.queue = [p for p in self.queue if p.due > now]
         seen: set[Fingerprint] = set()
@@ -89,6 +93,8 @@ class ConsistencyManager:
                 # and the chunk ages into garbage.
                 continue
             shard.cit_set_flag(p.fp, VALID, now)
+            if on_flip is not None:
+                on_flip(p.fp)
             n += 1
         self.flips_applied += n
         return n

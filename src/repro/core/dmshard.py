@@ -41,15 +41,21 @@ def digest_hash(fp: Fingerprint, has_bytes: bool, has_cit: bool) -> int:
     return int.from_bytes(h.digest(), "big")
 
 
-def omap_digest_hash(name: str, object_fp: Fingerprint) -> int:
-    """Per-entry hash for OMAP digests: the recipe identity is
-    (name, object fingerprint) — replicas holding different versions of a
-    name (which name-hash primary routing makes impossible without data
-    loss) or missing the name entirely digest differently."""
+def omap_digest_hash(
+    name: str, object_fp: Fingerprint | None, deleted: bool = False
+) -> int:
+    """Per-entry hash for OMAP digests: the identity is (name, object
+    fingerprint, tombstone marker) — replicas holding different versions
+    of a name, a tombstone where a peer holds the live entry (a delete
+    one replica missed), or missing the name entirely digest differently.
+    A tombstone has no object fingerprint; its marker byte is the
+    identity."""
     h = hashlib.blake2s(digest_size=8)
     h.update(name.encode("utf-8"))
-    h.update(object_fp.namespace.encode())
-    h.update(object_fp.value)
+    if object_fp is not None:
+        h.update(object_fp.namespace.encode())
+        h.update(object_fp.value)
+    h.update(bytes((deleted,)))
     return int.from_bytes(h.digest(), "big")
 
 
@@ -60,13 +66,20 @@ class CITEntry:
     size: int = 0
     # Bookkeeping for GC aging (sim time when the flag last became INVALID).
     invalid_since: int | None = None
+    # Sim time of the last refcount/flag mutation. The incremental audit's
+    # in-flight-transaction gate: an entry touched at or after a background
+    # round's start epoch may belong to a transaction still completing, so
+    # corrections for it are deferred to the next round.
+    mtime: int = 0
 
     def is_valid(self) -> bool:
         return self.flag == VALID
 
     def snapshot(self) -> "CITEntry":
         """Detached copy, safe to put on the wire (rebalance/scrub)."""
-        return CITEntry(self.refcount, self.flag, self.size, self.invalid_since)
+        return CITEntry(
+            self.refcount, self.flag, self.size, self.invalid_since, self.mtime
+        )
 
     def clone_into(self, shard: "DMShard", fp: Fingerprint, now: int) -> "CITEntry | None":
         """Copy this entry into ``shard`` under ``fp`` unless one already
@@ -84,7 +97,7 @@ class CITEntry:
 @dataclass
 class OMAPEntry:
     name: str
-    object_fp: Fingerprint
+    object_fp: Fingerprint | None
     chunk_fps: list[Fingerprint]
     size: int
     # Commit version: the committing transaction's cluster-monotonic id.
@@ -95,6 +108,16 @@ class OMAPEntry:
     # higher-versioned replica overwrite the fresh entry); the txn counter
     # only ever grows, so the latest commit always wins.
     version: int = 1
+    # Delete tombstone: ``deleted=True`` records that this name was deleted
+    # by transaction ``version`` at sim time ``deleted_at``. The record has
+    # no recipe (object_fp None, chunk_fps empty — the delete released the
+    # refs) but is replicated, digested, and repaired exactly like a live
+    # entry, so a replica that missed the delete adopts the tombstone
+    # instead of resurrecting the name. ``deleted_at`` travels with the
+    # record unchanged: a late adopter inherits the ORIGINAL deletion time,
+    # so the GC horizon ages cluster-consistently.
+    deleted: bool = False
+    deleted_at: int | None = None
 
 
 @dataclass
@@ -111,7 +134,7 @@ class DMShard:
     def cit_insert(self, fp: Fingerprint, size: int, now: int) -> CITEntry:
         if fp in self.cit:
             raise KeyError(f"CIT entry exists for {fp}")
-        e = CITEntry(refcount=0, flag=INVALID, size=size, invalid_since=now)
+        e = CITEntry(refcount=0, flag=INVALID, size=size, invalid_since=now, mtime=now)
         self.cit[fp] = e
         return e
 
@@ -120,12 +143,15 @@ class DMShard:
         if e.flag != flag:
             e.flag = flag
             e.invalid_since = now if flag == INVALID else None
+            e.mtime = max(e.mtime, now)
 
-    def cit_addref(self, fp: Fingerprint, delta: int = 1) -> int:
+    def cit_addref(self, fp: Fingerprint, delta: int = 1, now: int | None = None) -> int:
         e = self.cit[fp]
         e.refcount += delta
         if e.refcount < 0:
             raise AssertionError(f"negative refcount for {fp}")
+        if now is not None:
+            e.mtime = max(e.mtime, now)
         return e.refcount
 
     def cit_remove(self, fp: Fingerprint) -> None:
@@ -149,11 +175,65 @@ class DMShard:
     def omap_put(self, entry: OMAPEntry) -> None:
         self.omap[entry.name] = entry
 
+    def omap_apply(self, entry: OMAPEntry) -> bool:
+        """Version-gated put: the cluster-monotonic commit-version authority
+        rule applied receiver-side. The record lands only when it is at
+        least as new as what the replica holds — so a DELAYED commit
+        arriving after a newer replace or a newer tombstone cannot
+        resurrect the old version, and a tombstone cannot clobber a
+        recreate it lost the race to. Returns whether the record landed."""
+        cur = self.omap.get(entry.name)
+        if cur is not None and cur.version > entry.version:
+            return False
+        self.omap[entry.name] = entry
+        return True
+
     def omap_get(self, name: str) -> OMAPEntry | None:
         return self.omap.get(name)
 
     def omap_delete(self, name: str) -> OMAPEntry | None:
         return self.omap.pop(name, None)
+
+    def omap_tombstone(
+        self, name: str, version: int, now: int
+    ) -> tuple[bool, OMAPEntry | None]:
+        """Commit a delete tombstone at ``version`` (the deleting txn's
+        cluster-monotonic id). A strictly newer record already in place
+        wins — the delete is stale — otherwise the tombstone replaces
+        whatever is held (including nothing: a replica that missed the put
+        entirely still records the delete, guarding against the put's late
+        copy). Returns ``(applied, previous_entry)``; the previous LIVE
+        entry rides the response into the sender's seen-window so a
+        cancelled delete can restore it."""
+        prev = self.omap.get(name)
+        if prev is not None and prev.version > version:
+            return False, None
+        self.omap[name] = OMAPEntry(
+            name, None, [], 0, version, deleted=True, deleted_at=now
+        )
+        return True, prev
+
+    def omap_reap(self, name: str, version: int) -> bool:
+        """GC-horizon reap: remove the tombstone record iff the held entry
+        is a tombstone at exactly ``version`` (a newer write or delete is
+        untouched). Idempotent — the coordinator only sends this once every
+        live placement target proved it holds the aged tombstone."""
+        cur = self.omap.get(name)
+        if cur is None or not cur.deleted or cur.version != version:
+            return False
+        del self.omap[name]
+        return True
+
+    def aged_tombstones(self, now: int, horizon: int) -> dict[str, tuple[int, int]]:
+        """Tombstones past the GC horizon (name -> (version, deleted_at)) —
+        this node's reap candidates, listed in omap digest summary replies
+        so the coordinator can check cluster-wide full-ack before reaping."""
+        return {
+            name: (e.version, e.deleted_at)
+            for name, e in self.omap.items()
+            if e.deleted and e.deleted_at is not None
+            and now - e.deleted_at >= horizon
+        }
 
     # --- recovery digests (per-placement-group content summaries) -----------
     def chunk_digest(
@@ -162,23 +242,35 @@ class DMShard:
         cmap,
         groups: tuple = (),
         detail_all: bool = False,
-    ) -> tuple[dict, dict]:
+        only_groups: set | None = None,
+        summary_only: bool = False,
+    ) -> tuple[dict, dict, int]:
         """Digest THIS shard's chunk/CIT holdings, grouped by the placement
         tuple each fingerprint hashes to under ``cmap``. Returns
-        ``(summary, entries)``: summary maps group -> (count, xor-hash);
-        entries (detail mode: ``groups`` named or ``detail_all``) map
-        fp -> (has_bytes, has_cit, refcount, flag, size). Strictly
-        node-local — the wire view of this node a recovery coordinator
-        reconciles against."""
+        ``(summary, entries, skipped)``: summary maps group ->
+        (count, xor-hash); entries (detail mode: ``groups`` named or
+        ``detail_all``) map fp -> (has_bytes, has_cit, refcount, flag,
+        size, mtime). With ``only_groups`` (the node's dirty set for an
+        incremental probe) summaries cover just those groups and
+        ``skipped`` counts the clean groups left un-digested;
+        ``summary_only`` restricts summaries to the named ``groups``
+        without expanding detail. Strictly node-local — the wire view of
+        this node a recovery coordinator reconciles against."""
         from repro.core.placement import place
 
         want = set(groups)
-        detail = detail_all or bool(want)
+        detail = not summary_only and (detail_all or bool(want))
         summary: dict = {}
         entries: dict = {}
+        skipped: set = set()
         for fp in set(self.cit) | set(chunk_store):
             g = tuple(place(fp, cmap))
             if not detail:
+                if summary_only and g not in want:
+                    continue
+                if only_groups is not None and g not in only_groups:
+                    skipped.add(g)
+                    continue
                 cnt, xo = summary.get(g, (0, 0))
                 summary[g] = (cnt + 1, xo ^ digest_hash(fp, fp in chunk_store, fp in self.cit))
                 continue
@@ -191,31 +283,47 @@ class DMShard:
                 e.refcount if e is not None else 0,
                 e.flag if e is not None else INVALID,
                 e.size if e is not None else 0,
+                e.mtime if e is not None else 0,
             )
-        return summary, entries
+        return summary, entries, len(skipped)
 
     def omap_digest(
-        self, cmap, groups: tuple = (), detail_all: bool = False
-    ) -> tuple[dict, dict]:
-        """Digest THIS shard's OMAP entries, grouped by object-name
-        placement. Detail entries map name -> (object fingerprint, commit
-        version) — the identity and authority a repair needs to pick a
-        holder; the recipe itself travels with the repairing ``OmapPut``,
-        not with the digest."""
+        self,
+        cmap,
+        groups: tuple = (),
+        detail_all: bool = False,
+        only_groups: set | None = None,
+        summary_only: bool = False,
+    ) -> tuple[dict, dict, int]:
+        """Digest THIS shard's OMAP entries (tombstones included — a
+        tombstone digests differently from the live entry it replaced and
+        from absence, which is exactly what lets repair propagate deletes),
+        grouped by object-name placement. Detail entries map name ->
+        (object fingerprint, commit version, deleted, deleted_at) — the
+        identity and authority a repair needs to pick a holder; the recipe
+        itself travels with the repairing ``OmapPut``, not with the
+        digest. ``only_groups`` / ``summary_only`` as in
+        ``chunk_digest``; returns ``(summary, entries, skipped)``."""
         from repro.core.placement import place
 
         want = set(groups)
-        detail = detail_all or bool(want)
+        detail = not summary_only and (detail_all or bool(want))
         summary: dict = {}
         entries: dict = {}
+        skipped: set = set()
         for name, e in self.omap.items():
             g = tuple(place(name_fp(name), cmap))
             if not detail:
+                if summary_only and g not in want:
+                    continue
+                if only_groups is not None and g not in only_groups:
+                    skipped.add(g)
+                    continue
                 cnt, xo = summary.get(g, (0, 0))
-                summary[g] = (cnt + 1, xo ^ omap_digest_hash(name, e.object_fp))
+                summary[g] = (cnt + 1, xo ^ omap_digest_hash(name, e.object_fp, e.deleted))
             elif detail_all or g in want:
-                entries[name] = (e.object_fp, e.version)
-        return summary, entries
+                entries[name] = (e.object_fp, e.version, e.deleted, e.deleted_at)
+        return summary, entries, len(skipped)
 
     def recipe_refs(self, cmap, live: tuple, self_id: str) -> dict[Fingerprint, int]:
         """Aggregated chunk-reference counts from the recipes this node
@@ -223,12 +331,16 @@ class DMShard:
         ``cmap`` given the coordinator's ``live`` set — so across the
         cluster every logical object is counted by exactly one owner, even
         though OMAP entries are replicated. Occurrences count: an object
-        whose recipe repeats a chunk took one reference per occurrence."""
+        whose recipe repeats a chunk took one reference per occurrence.
+        Tombstones carry no recipe (the delete released the refs) and are
+        skipped."""
         from repro.core.placement import place
 
         live_set = set(live)
         counts: dict[Fingerprint, int] = {}
         for name, e in self.omap.items():
+            if e.deleted:
+                continue
             owner = next(
                 (t for t in place(name_fp(name), cmap) if t in live_set), None
             )

@@ -7,6 +7,18 @@ set against the live CIT: any fingerprint whose entry changed in the meantime
 ones are removed together with their stored chunk bytes.
 
 No journal, no extra logging — the commit flag IS the garbage marker.
+
+The collector also owns the OMAP delete-tombstone GC horizon
+(``tombstone_horizon``): how long a tombstone must age before this node
+lists it as a reap candidate in omap digest replies. Reaping itself is a
+cluster decision — the recovery coordinator sends ``TombstoneReap`` only
+once EVERY live placement target has listed the tombstone as aged (fully
+acked), because a tombstone's whole job is to outlive any stale live
+replica it still needs to beat. The horizon is therefore the maximum
+replica lag the delete path tolerates: a node that rejoins after being
+down longer than the horizon may resurrect a reaped name — the standard
+anti-entropy tombstone trade-off, sized here at several times the chunk
+aging threshold.
 """
 
 from __future__ import annotations
@@ -27,6 +39,7 @@ class _Held:
 @dataclass
 class GarbageCollector:
     threshold: int = 10            # sim-ticks a fingerprint must stay invalid
+    tombstone_horizon: int = 30    # sim-ticks an OMAP delete tombstone must age
     held: dict[Fingerprint, _Held] = field(default_factory=dict)
     collected_chunks: int = 0
     collected_bytes: int = 0

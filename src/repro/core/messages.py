@@ -40,9 +40,10 @@ ACK_MSG_BYTES = 64      # modeled size of the per-delivery ack on the reverse ed
 # omnisciently scanning) whole CIT/OMAP tables — the scalable-reconciliation
 # argument of the disaster-recovery literature.
 DIGEST_GROUP_BYTES = 16   # per-group summary record: (count, xor-of-hashes)
-DIGEST_ENTRY_BYTES = 48   # per-fp detail record: fp + (has_bytes, refcount, flag, size)
+DIGEST_ENTRY_BYTES = 56   # per-fp detail record: fp + (has_bytes, refcount, flag, size, mtime)
 RECIPE_REF_BYTES = 40     # per (chunk_fp, count) recipe-reference pair (audit)
-OMAP_DIGEST_ENTRY_BYTES = 48  # per-name detail record: name hash + object fp + size
+OMAP_DIGEST_ENTRY_BYTES = 64  # per-name detail record: name hash + object fp + version + tombstone marker
+TOMBSTONE_RECORD_BYTES = 24   # per aged-tombstone candidate: name hash + version + age
 
 
 class Message:
@@ -136,8 +137,35 @@ class OmapGet(Message):
 
 @dataclass(frozen=True)
 class OmapDelete(Message):
+    """Object-name-routed delete: commits a versioned TOMBSTONE record in
+    place of the live entry (never a bare removal — a replica that missed
+    the delete while unreachable would be indistinguishable from one that
+    missed the put, and OMAP repair would resurrect the name). ``version``
+    is the deleting transaction's cluster-monotonic id, the same authority
+    currency as ``OMAPEntry.version``: a tombstone beats any stale live
+    replica and a newer recreate beats the tombstone, by version, never by
+    placement order. Control-only on the wire; the response is the live
+    entry the tombstone replaced (cached in the seen-window so a
+    conditional cancel can restore it)."""
+
     TYPE = "omap_delete"
     name: str = ""
+    version: int = 0
+
+
+@dataclass(frozen=True)
+class TombstoneReap(Message):
+    """GC-horizon reap (coordinator -> holder): physically remove the
+    tombstone record for ``name`` iff the holder still has a tombstone at
+    exactly ``version`` — a newer write or newer delete is left untouched.
+    Sent only once the recovery round has proof the tombstone is FULLY
+    ACKED (every live placement target listed it as aged past the GC
+    horizon), so no stale live replica can remain that the tombstone still
+    needs to beat. Control-only on the wire."""
+
+    TYPE = "tombstone_reap"
+    name: str = ""
+    version: int = 0
 
 
 @dataclass(frozen=True)
@@ -215,7 +243,19 @@ class DigestRequest(Message):
 
     The cluster map travels with the request (versioned, tiny — modeled as
     control-only, like an OSDMap epoch share) so the node groups by the
-    placement the coordinator is reconciling against."""
+    placement the coordinator is reconciling against.
+
+    Incremental (epoch-scoped) digests: with ``since_epoch`` set, the node
+    summarizes ONLY the placement groups its dirty-epoch tracker marked at
+    or after that epoch (write/delete/rebalance traffic bumps a group's
+    dirty epoch; a cluster-map change marks everything dirty) and reports
+    how many clean groups it skipped — the always-on repair loop's way of
+    re-digesting just the slice that changed since its last completed
+    round. ``summary_only`` asks for exact (count, xor) summaries of the
+    named ``groups`` with no per-entry detail: the coordinator's second
+    probe to members that reported a group clean when some peer reported
+    it dirty (an explicit empty summary is then distinguishable from
+    "not probed")."""
 
     TYPE = "digest_request"
     kind: str = "chunks"
@@ -223,6 +263,8 @@ class DigestRequest(Message):
     groups: tuple = ()            # () = summary; else detail for these groups
     detail_all: bool = False      # detail for every group (audit)
     live: tuple[str, ...] = ()    # live set for recipe ownership (kind="recipes")
+    since_epoch: int | None = None  # incremental: summarize groups dirty since
+    summary_only: bool = False    # with ``groups``: summaries, no detail
 
     def response_payload_bytes(self, response) -> int:
         if isinstance(response, DigestReply):
@@ -236,21 +278,33 @@ class DigestReply(Message):
     ``DigestRequest`` ack). ``groups`` maps placement-group key ->
     ``(count, xor_hash)``; ``entries`` carries detail records:
 
-      * chunks detail: fp -> (has_bytes, refcount, flag, size)
-      * omap detail:   name -> object_fp
+      * chunks detail: fp -> (has_bytes, has_cit, refcount, flag, size, mtime)
+      * omap detail:   name -> (object_fp, version, deleted, deleted_at)
       * recipes:       fp -> reference count from owned recipes
 
-    Wire cost is per record (see the DIGEST_*/RECIPE_* constants) — the
-    whole point of digest-based reconciliation: summaries are O(groups),
-    details are fetched only for groups that disagree."""
+    ``epoch`` is the node's serve time — the epoch the digest describes.
+    With an incremental request (``since_epoch``), ``skipped_groups``
+    counts the clean placement groups the node did NOT re-digest, and an
+    omap summary reply additionally lists the node's aged tombstone
+    candidates (``tombstones``: name -> (version, deleted_at), only those
+    past the GC horizon) so the coordinator can reap fully-acked ones —
+    O(aged tombstones) wire, never a table walk.
+
+    Wire cost is per record (see the DIGEST_*/RECIPE_*/TOMBSTONE_*
+    constants) — the whole point of digest-based reconciliation: summaries
+    are O(groups), details are fetched only for groups that disagree."""
 
     TYPE = "digest_reply"
     kind: str = "chunks"
     groups: dict = None           # type: ignore[assignment]
     entries: dict = None          # type: ignore[assignment]
+    epoch: int = 0                # node's serve time (the digest's epoch)
+    skipped_groups: int = 0       # clean groups an incremental probe skipped
+    tombstones: dict | None = None  # name -> (version, deleted_at), aged only
 
     def reply_bytes(self) -> int:
         total = DIGEST_GROUP_BYTES * len(self.groups or ())
+        total += TOMBSTONE_RECORD_BYTES * len(self.tombstones or ())
         n = len(self.entries or ())
         if self.kind == "recipes":
             total += RECIPE_REF_BYTES * n
@@ -310,12 +364,19 @@ class TxnCancel(Message):
     released per the cached per-op outcomes; the OMAP entry removed when
     ``omap_name`` is set). If it is NOT seen, the id is poisoned so a copy
     still in flight is discarded on arrival instead of resurrecting the
-    cancelled transaction. Control-only on the wire."""
+    cancelled transaction. Control-only on the wire.
+
+    ``undelete=True`` cancels an unconfirmed ``OmapDelete`` instead of an
+    unconfirmed commit: if the tombstone at exactly ``ref_version`` is
+    still in place, the pre-delete entry (the delete's cached response)
+    is restored — a newer write or newer delete is left untouched."""
 
     TYPE = "txn_cancel"
     ref_msg_id: int = 0
     fps: tuple[Fingerprint, ...] = ()
     omap_name: str | None = None
+    undelete: bool = False
+    ref_version: int = 0
 
 
 @dataclass(frozen=True)
@@ -336,6 +397,7 @@ MESSAGE_TYPES = (
     OmapPut,
     OmapGet,
     OmapDelete,
+    TombstoneReap,
     DecrefBatch,
     RefOnlyWrite,
     ChunkRead,

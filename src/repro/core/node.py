@@ -13,7 +13,7 @@ from dataclasses import dataclass, field
 
 from repro.core.consistency import ConsistencyManager
 from repro.core.dmshard import DMShard, INVALID, VALID, CITEntry, OMAPEntry
-from repro.core.fingerprint import Fingerprint, sha256_fp
+from repro.core.fingerprint import Fingerprint, name_fp, sha256_fp
 from repro.core.gc import GarbageCollector
 from repro.core.messages import (
     ChunkOp,
@@ -31,6 +31,7 @@ from repro.core.messages import (
     RefAudit,
     RefOnlyWrite,
     RepairChunk,
+    TombstoneReap,
     TxnCancel,
 )
 from repro.core.transport import BoundedIdSet, Envelope, SeenWindow
@@ -39,6 +40,45 @@ from repro.core.transport import BoundedIdSet, Envelope, SeenWindow
 # Sink for ref-only ops, which never register async flips (they either ride
 # an existing valid entry or repair one whose bytes are already present).
 _NO_REGISTER: list = []
+
+
+@dataclass
+class DirtyTracker:
+    """Per-placement-group dirty epochs — the cheap metadata that makes
+    recovery incremental. Every mutating message bumps the dirty epoch of
+    the placement group it touched (group key = the placement tuple under
+    the node's cluster-map share, computed at mutation time); an
+    incremental digest probe (``DigestRequest.since_epoch``) then
+    re-digests only groups dirty at or after the probe's floor. A
+    cluster-map change invalidates every key (groups are placement tuples
+    OF a map), so ``rekey`` marks the whole node dirty at the remap epoch
+    — rebalance traffic is never silently skipped. Memory is O(groups
+    touched since the map epoch), not O(entries).
+
+    Durability: marks ride the shard, not RAM — every mark corresponds to
+    a durable shard/chunk-store mutation, so a crash loses neither (the
+    divergence a crash CREATES is what it missed while down, and that
+    dirt lives on the peers' trackers; the two-phase incremental summary
+    collection probes the rejoined member for peer-reported groups)."""
+
+    groups: dict = field(default_factory=dict)   # placement tuple -> last dirty epoch
+    all_dirty_at: int = 0                        # node birth / map change: everything dirty
+
+    def rekey(self, now: int) -> None:
+        self.groups.clear()
+        self.all_dirty_at = max(self.all_dirty_at, now)
+
+    def mark(self, group: tuple, now: int) -> None:
+        if now > self.groups.get(group, -1):
+            self.groups[group] = now
+
+    def dirty_since(self, since: int) -> "set | None":
+        """The groups to re-digest for a probe with floor ``since``; None
+        means 'everything' (the map changed, or the node is younger than
+        the floor covers)."""
+        if since <= self.all_dirty_at:
+            return None
+        return {g for g, e in self.groups.items() if e >= since}
 
 
 @dataclass
@@ -61,6 +101,11 @@ class NodeStats:
     audit_increfs: int = 0         # references an audit correction restored
     audit_decrefs: int = 0         # references an audit-tagged DecrefBatch released
     audit_flag_flips: int = 0      # stuck-INVALID flags an audit correction repaired
+    tombstones_written: int = 0    # delete tombstone records committed/adopted
+    tombstones_reaped: int = 0     # aged tombstones removed by TombstoneReap
+    stale_puts_refused: int = 0    # version-gated OmapPut/OmapDelete rejections
+    groups_digested: int = 0       # placement-group summaries this node computed
+    groups_skipped: int = 0        # clean groups an incremental probe skipped
 
 
 @dataclass
@@ -81,6 +126,32 @@ class StorageNode:
     seen: SeenWindow = field(default_factory=SeenWindow)
     _poisoned: BoundedIdSet = field(default_factory=BoundedIdSet)
     _edge_seq_seen: dict[str, int] = field(default_factory=dict)
+    # Cluster-map share (like an OSDMap epoch share) + per-placement-group
+    # dirty epochs. The map share only feeds dirty-group KEYING — message
+    # routing stays the sender's job; a node with no share (standalone unit
+    # tests, baselines) just serves every digest probe in full.
+    cmap: object = None
+    dirty: DirtyTracker = field(default_factory=DirtyTracker)
+
+    def set_cmap(self, cmap, now: int) -> None:
+        """Adopt a cluster-map share; a CHANGED map re-keys every placement
+        group, so the dirty tracker marks the whole node dirty at the remap
+        epoch (rebalance traffic is incremental-repair traffic)."""
+        if cmap != self.cmap:
+            self.cmap = cmap
+            self.dirty.rekey(now)
+
+    def _mark_chunk_dirty(self, fp: Fingerprint, now: int) -> None:
+        if self.cmap is not None:
+            from repro.core.placement import place
+
+            self.dirty.mark(tuple(place(fp, self.cmap)), now)
+
+    def _mark_name_dirty(self, name: str, now: int) -> None:
+        if self.cmap is not None:
+            from repro.core.placement import place
+
+            self.dirty.mark(tuple(place(name_fp(name), self.cmap)), now)
 
     # ------------------------------------------------------------------ life
     def crash(self) -> None:
@@ -150,12 +221,35 @@ class StorageNode:
             return self.shard.omap_get(msg.name)
         if isinstance(msg, OmapPut):
             e = msg.entry
-            self.shard.omap_put(
-                OMAPEntry(e.name, e.object_fp, list(e.chunk_fps), e.size, e.version)
+            applied = self.shard.omap_apply(
+                OMAPEntry(
+                    e.name, e.object_fp, list(e.chunk_fps), e.size, e.version,
+                    e.deleted, e.deleted_at,
+                )
             )
-            return True
+            if applied:
+                self._mark_name_dirty(e.name, now)
+                if e.deleted:
+                    self.stats.tombstones_written += 1
+            else:
+                # Version gate: a delayed commit (or a repair racing a
+                # newer write) may not clobber a newer record or tombstone.
+                self.stats.stale_puts_refused += 1
+            return applied
         if isinstance(msg, OmapDelete):
-            return self.shard.omap_delete(msg.name)
+            applied, prev = self.shard.omap_tombstone(msg.name, msg.version, now)
+            if applied:
+                self.stats.tombstones_written += 1
+                self._mark_name_dirty(msg.name, now)
+            else:
+                self.stats.stale_puts_refused += 1
+            return prev
+        if isinstance(msg, TombstoneReap):
+            reaped = self.shard.omap_reap(msg.name, msg.version)
+            if reaped:
+                self.stats.tombstones_reaped += 1
+                self._mark_name_dirty(msg.name, now)
+            return "reaped" if reaped else "noop"
         if isinstance(msg, DecrefBatch):
             self.decref_chunks(list(msg.fps), now, audit=msg.audit)
             return True
@@ -166,7 +260,7 @@ class StorageNode:
         if isinstance(msg, MigrateChunk):
             return self._apply_migrate(msg, now)
         if isinstance(msg, DigestRequest):
-            return self._serve_digest(msg)
+            return self._serve_digest(msg, now)
         if isinstance(msg, RepairChunk):
             return self._apply_repair(msg, now)
         if isinstance(msg, RefAudit):
@@ -242,7 +336,8 @@ class StorageNode:
 
         if entry is not None and entry.is_valid():
             # Duplicate write, valid flag: refcount increment granted.
-            self.shard.cit_addref(fp)
+            self.shard.cit_addref(fp, now=now)
+            self._mark_chunk_dirty(fp, now)
             self.stats.dedup_hits += 1
             return "dedup_hit"
 
@@ -250,15 +345,17 @@ class StorageNode:
             self.stats.consistency_checks += 1
             if fp in self.chunk_store:  # stat() says bytes are present
                 self.shard.cit_set_flag(fp, VALID, now)
-                self.shard.cit_addref(fp)
+                self.shard.cit_addref(fp, now=now)
+                self._mark_chunk_dirty(fp, now)
                 self.stats.repairs += 1
                 return "repaired"
             if data is None:
                 return "miss"
             # Bytes missing: store content first, then flip (async).
             self._disk_write(fp, data)
-            self.shard.cit_addref(fp)
+            self.shard.cit_addref(fp, now=now)
             register.append(fp)
+            self._mark_chunk_dirty(fp, now)
             self.stats.repairs += 1
             return "restored"
 
@@ -267,8 +364,9 @@ class StorageNode:
         # Unique chunk: store with INVALID flag; flip is async (paper §2.4).
         self.shard.cit_insert(fp, len(data), now)
         self._disk_write(fp, data)
-        self.shard.cit_addref(fp)
+        self.shard.cit_addref(fp, now=now)
         register.append(fp)
+        self._mark_chunk_dirty(fp, now)
         return "stored"
 
     def _apply_ref_only(
@@ -288,14 +386,33 @@ class StorageNode:
         its copy is still in flight): poison the id so a late arrival is
         discarded instead of resurrecting the cancelled transaction.
         TxnCancel itself rides the same seen-window, so a retransmitted
-        cancel never double-compensates."""
+        cancel never double-compensates.
+
+        ``undelete`` compensates a cancelled DELETE: the tombstone is
+        voided only if it is still in place at exactly the cancelled
+        transaction's version (``ref_version`` — a newer write or newer
+        delete won the race and stands), restoring the pre-delete entry
+        the delete's cached response preserved."""
         cached = self.seen.get(msg.ref_msg_id)
         if cached is self.seen.ABSENT:
             self._poisoned.add(msg.ref_msg_id)
             return "noop"
         self.stats.cancels_applied += 1
         if msg.omap_name is not None:
-            self.shard.omap_delete(msg.omap_name)
+            if msg.undelete:
+                cur = self.shard.omap_get(msg.omap_name)
+                if (
+                    cur is not None and cur.deleted
+                    and cur.version == msg.ref_version
+                ):
+                    if isinstance(cached, OMAPEntry):
+                        self.shard.omap_put(cached)
+                    else:
+                        self.shard.omap_delete(msg.omap_name)
+                    self._mark_name_dirty(msg.omap_name, now)
+            else:
+                self.shard.omap_delete(msg.omap_name)
+                self._mark_name_dirty(msg.omap_name, now)
         outcomes = cached if isinstance(cached, (list, tuple)) else []
         for fp, outcome in zip(msg.fps, outcomes):
             if outcome != "miss":
@@ -310,25 +427,54 @@ class StorageNode:
             self.stats.disk_bytes_written += len(msg.data)
         if msg.cit is not None:
             msg.cit.clone_into(self.shard, msg.fp, now)
+        self._mark_chunk_dirty(msg.fp, now)
         return "ok"
 
     # ------------------------------------------------------------- recovery
-    def _serve_digest(self, msg: DigestRequest) -> DigestReply:
+    def _serve_digest(self, msg: DigestRequest, now: int) -> DigestReply:
         """Answer a recovery coordinator's digest probe over this node's OWN
-        holdings (read-only — a duplicated probe recomputes harmlessly)."""
+        holdings (read-only — a duplicated probe recomputes harmlessly).
+
+        An incremental probe (``since_epoch``) is filtered through the
+        dirty tracker: only groups mutated at or after the floor are
+        re-digested, clean ones are counted as skipped. The probe's map is
+        adopted as this node's cluster-map share first — if it re-keys the
+        placement groups, the tracker conservatively reports everything
+        dirty. Summary omap probes additionally list this node's aged
+        tombstones (the GC-horizon reap candidates)."""
         self.stats.digests_served += 1
+        if msg.cmap is not None:
+            self.set_cmap(msg.cmap, now)
         if msg.kind == "recipes":
             counts = self.shard.recipe_refs(msg.cmap, msg.live, self.node_id)
-            return DigestReply(kind="recipes", groups={}, entries=counts)
+            return DigestReply(kind="recipes", groups={}, entries=counts, epoch=now)
+        only = None
+        if msg.since_epoch is not None and not msg.groups and not msg.detail_all:
+            only = self.dirty.dirty_since(msg.since_epoch)
         if msg.kind == "omap":
-            summary, entries = self.shard.omap_digest(
-                msg.cmap, msg.groups, msg.detail_all
+            summary, entries, skipped = self.shard.omap_digest(
+                msg.cmap, msg.groups, msg.detail_all,
+                only_groups=only, summary_only=msg.summary_only,
             )
-            return DigestReply(kind="omap", groups=summary, entries=entries)
-        summary, entries = self.shard.chunk_digest(
-            self.chunk_store, msg.cmap, msg.groups, msg.detail_all
+            tombs = None
+            if not msg.groups and not msg.detail_all:
+                tombs = self.shard.aged_tombstones(now, self.gc.tombstone_horizon)
+            self.stats.groups_digested += len(summary)
+            self.stats.groups_skipped += skipped
+            return DigestReply(
+                kind="omap", groups=summary, entries=entries, epoch=now,
+                skipped_groups=skipped, tombstones=tombs,
+            )
+        summary, entries, skipped = self.shard.chunk_digest(
+            self.chunk_store, msg.cmap, msg.groups, msg.detail_all,
+            only_groups=only, summary_only=msg.summary_only,
         )
-        return DigestReply(kind="chunks", groups=summary, entries=entries)
+        self.stats.groups_digested += len(summary)
+        self.stats.groups_skipped += skipped
+        return DigestReply(
+            kind="chunks", groups=summary, entries=entries, epoch=now,
+            skipped_groups=skipped,
+        )
 
     def _apply_repair(self, msg: RepairChunk, now: int) -> tuple[str, str]:
         """Digest-diff repair: adopt-if-missing, precisely reported. The
@@ -367,7 +513,8 @@ class StorageNode:
             action = "ok"
             if entry.refcount < expected:
                 self.stats.audit_increfs += expected - entry.refcount
-                self.shard.cit_addref(fp, expected - entry.refcount)
+                self.shard.cit_addref(fp, expected - entry.refcount, now=now)
+                self._mark_chunk_dirty(fp, now)
                 action = "incref"
             if expected > 0 and entry.flag == INVALID and fp in self.chunk_store:
                 # Recipes prove the chunk live and the bytes are on disk:
@@ -399,7 +546,8 @@ class StorageNode:
         entry = self.shard.cit_lookup(fp)
         if entry is None:
             return
-        rc = self.shard.cit_addref(fp, -1)
+        rc = self.shard.cit_addref(fp, -1, now=now)
+        self._mark_chunk_dirty(fp, now)
         if rc == 0:
             # Tombstone through the same tagged machinery: flag invalid,
             # GC ages it out; a re-reference before GC repairs it back.
@@ -440,12 +588,17 @@ class StorageNode:
 
     def tick(self, now: int) -> None:
         if self.alive:
-            self.cm.drain(self.shard, now)
+            self.cm.drain(
+                self.shard, now, on_flip=lambda fp: self._mark_chunk_dirty(fp, now)
+            )
 
     def run_gc(self, now: int) -> list[Fingerprint]:
         if not self.alive:
             return []
-        return self.gc.run(self.shard, self.chunk_store, now)
+        removed = self.gc.run(self.shard, self.chunk_store, now)
+        for fp in removed:
+            self._mark_chunk_dirty(fp, now)
+        return removed
 
     def stored_bytes(self) -> int:
         return sum(len(v) for v in self.chunk_store.values())

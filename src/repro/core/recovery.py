@@ -38,11 +38,24 @@ on the wire. The only direct object access is *sender-local*: reading a
 holder's own chunk store / OMAP to build the message that holder sends —
 the same idiom as rebalance, where a node reads its own disk to transmit.
 
-Known limitation (documented in docs/recovery.md): OMAP carries no delete
-tombstones, so a replica that missed an ``OmapDelete`` while unreachable
-will resurrect the entry at its peers during OMAP repair — the classic
-anti-entropy trade-off. Deletes issued while a partition is open are the
-one workload recovery cannot converge; deletes after heal are exact.
+Deletes are recovery-safe: ``OmapDelete`` commits a VERSIONED tombstone
+record that is replicated, digested and repaired exactly like a live
+entry — authority is the highest commit version regardless of liveness,
+so a tombstone beats any stale live replica (no resurrection) and a
+recreate beats a stale tombstone, including across partitions. Tombstones
+past the GC horizon are reaped only on cluster-wide full-ack proof
+(every live placement target lists the aged tombstone at the same
+version), via ``TombstoneReap``.
+
+Recovery is also ALWAYS-ON capable: digests carry an epoch, nodes track
+per-placement-group dirty epochs, and an incremental round
+(``since_epoch``) re-digests only groups mutated since the last completed
+round — clean groups are skipped and counted. A second summary-only probe
+wave disambiguates "skipped because clean" from "holds nothing" for
+groups a peer reported. ``RepairDaemon`` packages this as a background
+loop that interleaves with live writes; its refcount audit excludes
+fingerprints any replica touched at or after the round's start epoch
+(in-flight transactions are deferred to the next round, not misjudged).
 """
 
 from __future__ import annotations
@@ -58,6 +71,7 @@ from repro.core.messages import (
     OmapPut,
     RefAudit,
     RepairChunk,
+    TombstoneReap,
 )
 from repro.core.node import NodeDown
 from repro.core.placement import place
@@ -90,6 +104,10 @@ class RecoveryReport:
     unrecoverable: int = 0        # fps whose bytes survive on no holder
     gc_removed: int = 0           # chunks GC reclaimed during the round
     unreachable: int = 0          # digest probes lost (node skipped this round)
+    groups_digested: int = 0      # group summaries nodes actually computed
+    groups_skipped: int = 0       # clean groups incremental probes skipped
+    tombstones_reaped: int = 0    # aged tombstone removals acked (full-ack reap)
+    audit_deferred: int = 0       # fps excluded from the audit as in-flight
 
     @property
     def corrections(self) -> int:
@@ -106,8 +124,18 @@ class RecoveryRound:
 
     cluster: object
     src: str = RECOVERY_SRC
+    # Incremental floor: only placement groups a node marked dirty at or
+    # after this epoch are re-digested (None = full round, every group).
+    since_epoch: int | None = None
+    # Audit concurrency gate: fingerprints whose CIT entry ANY replica
+    # mutated at or after this epoch belong to transactions in flight
+    # while the round runs — they are deferred, not judged (None = quiesced
+    # round, judge everything).
+    exclude_after: int | None = None
     report: RecoveryReport = field(default_factory=RecoveryReport)
     _chunk_digests: dict = field(default_factory=dict)   # nid -> {group: (count, xor)}
+    _aged_tombstones: dict = field(default_factory=dict) # nid -> {name: (ver, at)}
+    _tombstones_collected: bool = False
     # None = repair_omap has not run this round (standalone audits are the
     # caller's responsibility); False = it ran but lost probes, so OMAP
     # replicas may still be incomplete and the audit must not trust the
@@ -158,6 +186,62 @@ class RecoveryRound:
                 out[g] = sorted(consider)
         return groups, out
 
+    def _collect_summaries(self, kind: str) -> dict:
+        """Collect per-group summaries from every live node; the heart of
+        both full and incremental rounds. A full round (``since_epoch``
+        None) is one probe wave. An incremental round is two:
+
+        1. every node digests only its DIRTY groups (clean ones are
+           skipped server-side and counted), and — for omap probes —
+           lists its aged tombstones;
+        2. for each group some peer DID report, every group member that
+           replied but skipped it is re-probed ``summary_only`` for just
+           those groups — otherwise ``_mismatched`` would read "skipped
+           because clean" as "holds nothing" and repair against a hole.
+
+        Groups clean on EVERY holder are never compared — the incremental
+        win. A stray group whose content was never touched stays invisible
+        to incremental rounds; the periodic full round still finds it."""
+        c = self.cluster
+        replies: dict = {}
+        for nid in self._live():
+            r = self._ask(
+                nid,
+                DigestRequest(kind=kind, cmap=c.cmap, since_epoch=self.since_epoch),
+            )
+            if r is None:
+                continue
+            replies[nid] = dict(r.groups)
+            self.report.groups_digested += len(r.groups)
+            self.report.groups_skipped += r.skipped_groups
+            if kind == "omap":
+                if r.tombstones:
+                    self._aged_tombstones[nid] = dict(r.tombstones)
+                self._tombstones_collected = True
+        if self.since_epoch is not None:
+            need: dict[str, set] = {}
+            all_groups: set = set()
+            for r in replies.values():
+                all_groups.update(r)
+            for g in all_groups:
+                for member in g:
+                    if member in replies and g not in replies[member]:
+                        need.setdefault(member, set()).add(g)
+            for nid in sorted(need):
+                r = self._ask(
+                    nid,
+                    DigestRequest(
+                        kind=kind,
+                        cmap=c.cmap,
+                        groups=tuple(sorted(need[nid], key=repr)),
+                        summary_only=True,
+                    ),
+                )
+                if r is not None:
+                    replies[nid].update(r.groups)
+                    self.report.groups_digested += len(r.groups)
+        return replies
+
     # ------------------------------------------------- phase 1: OMAP repair
     def repair_omap(self) -> int:
         """Reconcile OMAP replica sets by name-placement-group digest diff;
@@ -169,11 +253,7 @@ class RecoveryRound:
         would release live data."""
         c = self.cluster
         lost_before = self.report.unreachable
-        replies: dict = {}
-        for nid in self._live():
-            r = self._ask(nid, DigestRequest(kind="omap", cmap=c.cmap))
-            if r is not None:
-                replies[nid] = r.groups
+        replies = self._collect_summaries("omap")
         _, mismatched = self._mismatched(replies)
         repaired = 0
         for g, consider in mismatched.items():
@@ -200,26 +280,41 @@ class RecoveryRound:
                 if not holders:
                     continue
                 # Version authority: the replica holding the HIGHEST commit
-                # version wins (every replace bumps ``OMAPEntry.version``),
-                # with placement order breaking ties. Placement order alone
-                # is wrong precisely when recovery matters: a primary that
-                # was down across a replace holds the OLD version and would
-                # resurrect it cluster-wide. A name some replicas miss
-                # entirely is re-adopted from the best holder (the
-                # no-tombstone resurrection caveat, docs/recovery.md).
+                # version wins (every replace AND every delete bumps the
+                # cluster-monotonic version), with placement order breaking
+                # ties. Placement order alone is wrong precisely when
+                # recovery matters: a primary that was down across a
+                # replace holds the OLD version and would resurrect it
+                # cluster-wide. Tombstones are records like any other: a
+                # tombstone at the highest version is the authority (the
+                # delete propagates, no resurrection), and a live recreate
+                # above a tombstone's version wins right back.
                 authority = min(
                     holders,
                     key=lambda n: (-details[n][name][1], order.get(n, len(targets))),
                 )
-                auth_fp, _ = details[authority][name]
+                auth_version = details[authority][name][1]
+                entry = c.nodes[authority].shard.omap_get(name)  # sender-local
+                if entry is None:
+                    continue
                 for t in targets:
                     if t not in details or t == authority or not c.nodes[t].alive:
                         continue
                     held = details[t].get(name)
-                    if held is not None and held[0] == auth_fp:
+                    if held is not None and held[1] == auth_version:
                         continue  # replica already holds the authoritative version
-                    entry = c.nodes[authority].shard.omap_get(name)  # sender-local
-                    if entry is None:
+                    if self._send(authority, t, OmapPut(entry, migrate=True)) is not None:
+                        repaired += 1
+                # A stray holding a STALE version upgrades in place too —
+                # otherwise its group summary diverges forever and every
+                # later round re-details the group. Strays holding nothing
+                # adopt nothing: repair converges replicas, rebalance (or
+                # reap) drains strays.
+                for t in sorted(details):
+                    if t in targets or t == authority or not c.nodes[t].alive:
+                        continue
+                    held = details[t].get(name)
+                    if held is None or held[1] == auth_version:
                         continue
                     if self._send(authority, t, OmapPut(entry, migrate=True)) is not None:
                         repaired += 1
@@ -235,12 +330,7 @@ class RecoveryRound:
         """Per-placement-group chunk/CIT summaries from every live node.
         Kept separate from ``repair_chunks`` so a topology change between
         the two is an explicit, testable hazard."""
-        c = self.cluster
-        self._chunk_digests = {}
-        for nid in self._live():
-            r = self._ask(nid, DigestRequest(kind="chunks", cmap=c.cmap))
-            if r is not None:
-                self._chunk_digests[nid] = r.groups
+        self._chunk_digests = self._collect_summaries("chunks")
         return self._chunk_digests
 
     def repair_chunks(self) -> int:
@@ -281,12 +371,12 @@ class RecoveryRound:
         CIT snapshot is built from the digest detail, never read from a
         foreign shard; the chunk bytes are the sending holder's own disk."""
         c = self.cluster
-        absent = (False, False, 0, INVALID, 0)
+        absent = (False, False, 0, INVALID, 0, 0)
         has_bytes = [n for n, e in details.items() if e.get(fp, absent)[0]]
         has_cit = [n for n, e in details.items() if e.get(fp, absent)[1]]
 
         def snap_from(nid: str) -> CITEntry:
-            _, _, refcount, flag, size = details[nid][fp]
+            _, _, refcount, flag, size, _ = details[nid][fp]
             return CITEntry(
                 refcount, flag, size, None if flag == VALID else c.now
             )
@@ -355,7 +445,16 @@ class RecoveryRound:
         Safety gate: if ANY live node's recipe digest is lost — or the
         round's OMAP repair phase lost probes, leaving replicas possibly
         unrepaired — the audit is skipped: partial expected counts would
-        release references belonging to the unheard node's objects."""
+        release references belonging to the unheard node's objects.
+
+        Concurrency gate (``exclude_after``): a fingerprint whose CIT
+        entry ANY replica mutated at or after the round's start epoch may
+        belong to a transaction still completing — its refs were taken but
+        its commit (or its async flag flip) has not landed, so the recipe
+        walk would misread it as leaked. Such fingerprints are deferred to
+        the next round (counted as ``audit_deferred``), which lets the
+        audit run CONCURRENTLY with live writes instead of requiring a
+        quiesced cluster."""
         if self._omap_repair_complete is False:
             self.report.audit_skipped = True
             return 0
@@ -379,11 +478,21 @@ class RecoveryRound:
             if r is not None:
                 actual[nid] = r.entries
 
+        young: set = set()
+        if self.exclude_after is not None:
+            for nid in actual:
+                for fp, d in actual[nid].items():
+                    if d[5] >= self.exclude_after:
+                        young.add(fp)
+            self.report.audit_deferred += len(young)
+
         decrefs: dict[str, list[Fingerprint]] = {}
         corrections: dict[str, list] = {}
         for nid in sorted(actual):
             for fp in sorted(actual[nid]):
-                _, has_cit, refcount, flag, _ = actual[nid][fp]
+                if fp in young:
+                    continue
+                _, has_cit, refcount, flag, _, _ = actual[nid][fp]
                 targets = place(fp, c.cmap)  # CURRENT map: migrated chunks
                 if nid not in targets:
                     continue  # stray awaiting rebalance — not audit's call
@@ -410,7 +519,44 @@ class RecoveryRound:
                 self.report.audit_msgs += 1
         return self.report.corrections
 
-    # ------------------------------------------------------- phase 4: GC
+    # ------------------------------------------- phase 4: tombstone reap
+    def reap_tombstones(self) -> int:
+        """GC-horizon tombstone reap, gated on cluster-wide full-ack proof:
+        a tombstone is reaped only when EVERY live placement target under
+        the current map listed it as aged at the SAME version — i.e. the
+        delete is fully replicated and no stale live replica remains for
+        it to beat. Anything less (a target unreachable, still holding the
+        live entry, or holding a different version) keeps the tombstone
+        for the next round; repair converges the replicas first. The reap
+        itself is version-conditional at the receiver, so a recreate that
+        lands between proof and reap survives."""
+        c = self.cluster
+        if not self._tombstones_collected:
+            self._collect_summaries("omap")
+        candidates: dict[str, dict[str, int]] = {}
+        for nid, tombs in self._aged_tombstones.items():
+            for name, (version, _at) in tombs.items():
+                candidates.setdefault(name, {})[nid] = version
+        reaped = 0
+        for name in sorted(candidates):
+            listers = candidates[name]
+            if len(set(listers.values())) != 1:
+                continue  # replicas disagree on the delete: repair first
+            version = next(iter(listers.values()))
+            targets = [
+                t for t in place(name_fp(name), c.cmap) if c.nodes[t].alive
+            ]
+            if not targets or any(t not in listers for t in targets):
+                continue  # not fully acked by every live placement target
+            for t in sorted(listers):
+                if not c.nodes[t].alive:
+                    continue
+                if self._send(self.src, t, TombstoneReap(name, version)) == "reaped":
+                    reaped += 1
+        self.report.tombstones_reaped += reaped
+        return reaped
+
+    # ------------------------------------------------------- phase 5: GC
     def collect_garbage(self, rounds: int = 2) -> int:
         """Reclaim what the audit tombstoned (pre-aged: collected on the
         first sweep) plus ordinary aged garbage, to a fixed point."""
@@ -431,14 +577,57 @@ class RecoveryRound:
         self.collect_digests()
         self.repair_chunks()
         self.audit_refcounts()
+        self.reap_tombstones()
         self.collect_garbage()
         return self.report
+
+
+@dataclass
+class RepairDaemon:
+    """Always-on incremental repair: runs epoch-scoped recovery rounds
+    concurrently with live traffic instead of waiting for an operator's
+    post-mortem ``recover()``.
+
+    Each ``step()`` starts a round at the current sim time and scopes it
+    two ways: digests cover only placement groups dirtied at or after the
+    LAST COMPLETED round's start (``since_epoch`` — the dirty trackers
+    make clean groups free), and the refcount audit defers fingerprints
+    mutated at or after THIS round's start (``exclude_after`` — in-flight
+    transactions are never misjudged). GC runs one un-forced sweep per
+    step — aging happens on the cluster's own clock, the daemon doesn't
+    fast-forward time the way the post-mortem path does.
+
+    The epoch floor only advances when a round heard every node: a round
+    with lost probes repairs what it can but the next round re-covers the
+    same window, so missed dirt cannot slip between rounds."""
+
+    cluster: object
+    last_completed: int = 0
+    rounds_run: int = 0
+    reports: list = field(default_factory=list)
+
+    def step(self) -> RecoveryReport:
+        c = self.cluster
+        start = c.now
+        r = RecoveryRound(c, since_epoch=self.last_completed, exclude_after=start)
+        r.repair_omap()
+        r.collect_digests()
+        r.repair_chunks()
+        r.audit_refcounts()
+        r.reap_tombstones()
+        removed = sum(len(fps) for fps in c.run_gc().values())
+        r.report.gc_removed += removed
+        if r.report.unreachable == 0:
+            self.last_completed = start
+        self.rounds_run += 1
+        self.reports.append(r.report)
+        return r.report
 
 
 def run_recovery(cluster) -> RecoveryReport:
     """Full post-failure reconciliation round (the split-brain heal path):
     OMAP repair -> digest-diff chunk repair -> cluster-wide refcount audit
-    -> GC."""
+    -> tombstone reap -> GC."""
     return RecoveryRound(cluster).run()
 
 

@@ -4,3 +4,33 @@ import sys
 # smoke tests must see exactly 1 CPU device (the dry-run sets 512 itself,
 # in its own process) — so no XLA_FLAGS here, per the launcher contract.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def assert_seen_window_margin(
+    cluster, capacity: int = 1024, fraction: float = 0.25
+) -> float:
+    """Measured-margin seen-window pressure check for the chaos suites.
+
+    Eviction pressure must be zero (an evicted id re-opens the double-apply
+    window a late duplicate exploits), AND the peak occupancy must stay
+    under ``fraction`` of the window's ``capacity`` — a measured headroom
+    claim, not just "nothing fell out": a schedule that filled the window
+    to 99% would still pass a zero-eviction assert while one extra
+    in-flight message away from silent re-application.
+
+    Returns the measured margin (peak / capacity) so callers can report
+    it in their failure messages or print it under ``-s``.
+    """
+    stats = cluster.stats
+    assert stats.seen_evictions == 0, (
+        f"seen-window evicted {stats.seen_evictions} ids — in-flight depth "
+        f"exceeded the {capacity}-id bound; late duplicates may re-apply"
+    )
+    high = stats.seen_high_water
+    budget = int(capacity * fraction)
+    assert high <= budget, (
+        f"seen-window peak occupancy {high} exceeds the stated margin "
+        f"{budget} ({fraction:.0%} of {capacity}): the schedule is "
+        f"{high / capacity:.1%} into the window, too close to eviction"
+    )
+    return high / capacity

@@ -30,6 +30,7 @@ import os
 import numpy as np
 import pytest
 
+from conftest import assert_seen_window_margin
 from repro.core import (
     ChunkOpBatch,
     ChunkingSpec,
@@ -71,7 +72,7 @@ def cluster_state(c, with_store: bool = True):
     for nid, n in c.nodes.items():
         cit = {fp: (e.refcount, e.flag, e.size) for fp, e in n.shard.cit.items()}
         omap = {
-            name: (e.object_fp, tuple(e.chunk_fps), e.size)
+            name: (e.object_fp, tuple(e.chunk_fps), e.size, e.deleted)
             for name, e in n.shard.omap.items()
         }
         store = dict(n.chunk_store) if with_store else None
@@ -502,7 +503,12 @@ def test_chaos_schedule_converges_to_reliable_oracle(chaos_seed):
             raise AssertionError(
                 f"chaos seed {chaos_seed}: batch did not commit in 6 client retries"
             )
-        cluster.delete_object("c1")
+        for attempt in range(6):
+            try:
+                cluster.delete_object("c1")
+                break
+            except WriteError:
+                continue  # tombstone unacked under chaos: client retries
         for attempt in range(6):
             if cluster.write_object_by_ref("ref", "c2") is not None:
                 break
@@ -515,11 +521,11 @@ def test_chaos_schedule_converges_to_reliable_oracle(chaos_seed):
         f"chaos seed {chaos_seed} diverged from the reliable oracle "
         f"(repro: CHAOS_SEED_BASE={chaos_seed} CHAOS_SCHEDULES=1)"
     )
-    # Seen-window eviction pressure must be ZERO at default sizing: a chaos
-    # schedule never pushes in-flight depth anywhere near the 1024-id bound
-    # (if it did, a late duplicate could slip past dedup and re-apply).
-    assert c.stats.seen_evictions == 0
-    assert 0 < c.stats.seen_high_water < 1024 // 4
+    # Measured seen-window margin at default sizing: zero evictions AND
+    # peak occupancy within a stated fraction of capacity — a schedule that
+    # merely avoided eviction while filling the window would still fail.
+    margin = assert_seen_window_margin(c)
+    assert margin > 0, "a chaos schedule must exercise the window at all"
     # GC reachability: another full GC cycle removes nothing on either side
     before = cluster_state(c)
     settle(oracle), settle(c)

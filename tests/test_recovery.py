@@ -23,12 +23,14 @@ import os
 import numpy as np
 import pytest
 
+from conftest import assert_seen_window_margin
 from repro.core import (
     CONTROL_MSG_BYTES,
     DIGEST_ENTRY_BYTES,
     DIGEST_GROUP_BYTES,
     OMAP_DIGEST_ENTRY_BYTES,
     RECIPE_REF_BYTES,
+    TOMBSTONE_RECORD_BYTES,
     ChunkOpBatch,
     ChunkingSpec,
     CITEntry,
@@ -36,9 +38,12 @@ from repro.core import (
     DedupCluster,
     DigestReply,
     DigestRequest,
+    OmapPut,
+    ReadError,
     RecoveryRound,
     RefAudit,
     RepairChunk,
+    RepairDaemon,
     TxnCancel,
     WriteError,
     chaos,
@@ -67,8 +72,11 @@ def cluster_state(c):
     state = {}
     for nid, n in c.nodes.items():
         cit = {fp: (e.refcount, e.flag, e.size) for fp, e in n.shard.cit.items()}
+        # versions and deleted_at are clock/txn-counter artifacts that may
+        # legitimately differ between a cluster and its oracle; the deleted
+        # FLAG is state (a tombstone is not a live empty object)
         omap = {
-            name: (e.object_fp, tuple(e.chunk_fps), e.size)
+            name: (e.object_fp, tuple(e.chunk_fps), e.size, e.deleted)
             for name, e in n.shard.omap.items()
         }
         state[nid] = (cit, omap, dict(n.chunk_store))
@@ -581,6 +589,276 @@ def test_unrecoverable_bytes_still_repairs_surviving_cit_entries():
     assert r2.report.groups_mismatched == 0
 
 
+# ------------------------------------- tombstones & always-on recovery
+def test_tombstone_wire_model():
+    fp = sha256_fp(b"t" * 64)
+    req = DigestRequest(kind="omap", since_epoch=3)
+    # omap detail entries are (object_fp, version, deleted, deleted_at)
+    detail = DigestReply(kind="omap", groups={}, entries={"n": (fp, 4, False, None)})
+    assert req.response_payload_bytes(detail) == OMAP_DIGEST_ENTRY_BYTES
+    # aged-tombstone listings ride summary replies, one record each
+    summary = DigestReply(
+        kind="omap", groups={("a", "b"): (1, 9)}, entries={},
+        tombstones={"gone": (7, 100), "also": (9, 120)},
+    )
+    assert req.response_payload_bytes(summary) == (
+        DIGEST_GROUP_BYTES + 2 * TOMBSTONE_RECORD_BYTES
+    )
+    # chunk detail carries the mtime column the concurrent audit gates on
+    chunk_detail = DigestReply(
+        kind="chunks", groups={}, entries={fp: (True, True, 1, 1, 100, 5)}
+    )
+    assert (
+        DigestRequest(kind="chunks").response_payload_bytes(chunk_detail)
+        == DIGEST_ENTRY_BYTES
+    )
+
+
+def test_stale_put_cannot_resurrect_tombstone():
+    """Receiver-side version gate: a delayed OmapPut carrying the
+    pre-delete entry must not clobber the newer tombstone."""
+    from repro.core import name_fp
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    data = np.random.default_rng(50).bytes(2048)
+    c.write_object("x", data)
+    c.tick(2)
+    targets = place(name_fp("x"), c.cmap)
+    stale = c.nodes[targets[0]].shard.omap_get("x")
+    assert c.delete_object("x")
+    refused_before = sum(n.stats.stale_puts_refused for n in c.nodes.values())
+    applied = c.transport.send("client", targets[0], OmapPut(stale), c.now)
+    assert applied is False
+    assert (
+        sum(n.stats.stale_puts_refused for n in c.nodes.values())
+        == refused_before + 1
+    )
+    e = c.nodes[targets[0]].shard.omap_get("x")
+    assert e is not None and e.deleted
+    with pytest.raises(ReadError):
+        c.read_object("x")
+
+
+def test_tombstone_reap_requires_full_ack():
+    """A replica that missed the delete blocks the reap: round 1 repairs
+    the tombstone onto it (version beats the stale live entry — no
+    resurrection), and only round 2 — every live target listing the aged
+    tombstone — reaps it everywhere."""
+    from repro.core import name_fp
+
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    data = np.random.default_rng(51).bytes(2048)
+    c.write_object("x", data)
+    c.tick(2)
+    targets = place(name_fp("x"), c.cmap)
+    c.crash_node(targets[1])          # this replica misses the delete
+    assert c.delete_object("x")
+    horizon = max(n.gc.tombstone_horizon for n in c.nodes.values())
+    c.tick(horizon + 1)
+    c.restart_node(targets[1])        # rejoins holding the stale live entry
+    r1 = c.recover()
+    assert r1.tombstones_reaped == 0, (
+        "reap requires EVERY live target to have listed the aged tombstone; "
+        "the rejoiner only adopted it this round"
+    )
+    e = c.nodes[targets[1]].shard.omap_get("x")
+    assert e is not None and e.deleted, "repair must propagate the tombstone"
+    with pytest.raises(ReadError):
+        c.read_object("x")
+    r2 = c.recover()
+    assert r2.tombstones_reaped > 0
+    for n in c.nodes.values():
+        assert "x" not in n.shard.omap, "fully-acked aged tombstone must reap"
+
+
+def test_delete_failure_before_tombstone_leaves_object_intact():
+    """Mid-delete failure, phase 1: nothing committed -> the object stays
+    fully readable with its refs untouched."""
+    from repro.core import TransactionAbort
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    data = np.random.default_rng(52).bytes(3072)
+    c.write_object("x", data)
+    c.tick(2)
+    refs = total_refs(c)
+
+    def boom(event, ctx):
+        if event == "before_tombstone":
+            raise TransactionAbort("injected before the tombstone commit")
+
+    c.fault_injector = boom
+    with pytest.raises(TransactionAbort):
+        c.delete_object("x")
+    c.fault_injector = None
+    assert c.read_object("x") == data
+    assert total_refs(c) == refs
+    settle(c)
+    assert c.read_object("x") == data
+
+
+def test_delete_failure_after_tombstone_is_fully_tombstoned():
+    """Mid-delete failure, phase 2: the tombstone committed but the refs
+    were never released — the name reads as deleted (never a half-released
+    recipe), and the leaked refs are exactly what the audit reclaims."""
+    from repro.core import TransactionAbort
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    data = np.random.default_rng(53).bytes(3072)
+    c.write_object("x", data)
+    c.tick(2)
+
+    def boom(event, ctx):
+        if event == "before_delete_decref":
+            raise TransactionAbort("injected before ref release")
+
+    c.fault_injector = boom
+    with pytest.raises(TransactionAbort):
+        c.delete_object("x")
+    c.fault_injector = None
+    with pytest.raises(ReadError):
+        c.read_object("x")
+    rep = c.recover()
+    assert rep.refs_over > 0, "the unreleased refs are audit-visible leaks"
+    settle(c)
+    assert total_refs(c) == 0
+    assert sum(len(n.chunk_store) for n in c.nodes.values()) == 0
+
+
+def test_cancelled_delete_restores_the_entry():
+    """A delete whose every tombstone ack is lost rolls back: the
+    conditional TxnCancel(undelete) restores the pre-delete entry
+    receiver-side iff the tombstone is still in place at that exact
+    version — a newer write racing in is left untouched."""
+    from repro.core import OmapDelete
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    data = np.random.default_rng(54).bytes(2048)
+    c.write_object("x", data)
+    c.tick(2)
+    refs = total_refs(c)
+
+    def eat_delete_acks(src, dst, msg, now):
+        if isinstance(msg, OmapDelete):
+            return ("ack_drop", 0)
+        return ("deliver", 0)
+
+    c.transport.policy = eat_delete_acks
+    with pytest.raises(WriteError):
+        c.delete_object("x")
+    c.transport.policy = reliable()
+    c.tick(2)
+    assert c.read_object("x") == data, "cancelled delete must restore the entry"
+    assert total_refs(c) == refs, "no refs may be released by a failed delete"
+
+
+def test_incremental_rounds_redigest_strictly_fewer_groups():
+    """The always-on win: a background round scoped by ``since_epoch``
+    re-digests only groups dirtied since the last completed round — and
+    still reaches the same fixed point as a quiesced full round."""
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    rng = np.random.default_rng(55)
+    c.write_objects([(f"o{i}", rng.bytes(3072)) for i in range(12)])
+    c.tick(3)
+    d = RepairDaemon(c)
+    r1 = d.step()
+    assert r1.groups_skipped == 0, "round 1 covers everything since epoch 0"
+    c.tick(2)
+    c.write_object("o3", rng.bytes(3072))  # dirty a slice of the cluster
+    c.tick(2)
+    r2 = d.step()
+    assert r2.groups_skipped > 0, "clean groups must be skipped server-side"
+    assert r2.groups_digested < r1.groups_digested, (
+        "a partially-dirty cluster must re-digest strictly fewer groups"
+    )
+    c.tick(3)
+    rep = c.recover()  # quiesced full round: nothing left to find
+    assert rep.corrections == 0
+    assert rep.chunks_repaired == 0
+    assert rep.omap_repaired == 0
+
+
+def test_incremental_round_repairs_a_crash_window():
+    """Scoping by dirty epoch must not hide real divergence: a write that
+    lands while one replica is down dirties the SURVIVORS' trackers; the
+    incremental step's two-phase collection re-probes the rejoined member
+    for those peer-reported groups (its own tracker thinks them clean) and
+    repairs the crash window — no full round needed."""
+    from repro.core import name_fp
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    rng = np.random.default_rng(57)
+    c.write_objects([(f"o{i}", rng.bytes(3072)) for i in range(6)])
+    c.tick(3)
+    d = RepairDaemon(c)
+    d.step()                       # baseline: everything covered + settled
+    c.tick(2)
+    blob = rng.bytes(3072)
+    targets = place(name_fp("fresh"), c.cmap)
+    c.crash_node(targets[1])
+    c.write_object("fresh", blob)  # commits on the survivors only
+    c.tick(2)
+    c.restart_node(targets[1])
+    r = d.step()
+    assert r.groups_skipped > 0, "untouched groups stay skipped"
+    assert r.omap_repaired >= 1, (
+        "the incremental step must repair the crash window by itself"
+    )
+    e = c.nodes[targets[1]].shard.omap_get("fresh")
+    assert e is not None and not e.deleted
+    assert c.read_object("fresh") == blob
+
+
+def test_audit_defers_inflight_transaction():
+    """An audit running concurrently with a write (refs taken, commit not
+    yet landed) defers the young fingerprints instead of releasing them as
+    leaks; without the gate the same audit misjudges them."""
+    rng = np.random.default_rng(56)
+    base, payload = rng.bytes(3072), rng.bytes(3072)
+    observed: dict = {}
+
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    c.write_object("a", base)
+    c.tick(3)
+
+    def audit_mid_txn(event, ctx):
+        if event == "before_omap" and ctx.get("name") == "b" and not observed:
+            r = RecoveryRound(c, exclude_after=c.now)
+            r.audit_refcounts()
+            observed["gated"] = r.report
+
+    c.fault_injector = audit_mid_txn
+    c.write_object("b", payload)
+    c.fault_injector = None
+    rep = observed["gated"]
+    assert rep.audit_deferred > 0, "the in-flight txn's fps must be deferred"
+    assert rep.refs_over == 0, "in-flight refs must not be misjudged as leaks"
+    assert c.read_object("b") == payload
+    c.tick(3)
+    rep2 = c.recover()
+    assert rep2.corrections == 0, "deferral left nothing broken behind"
+
+    # Counterfactual: the identical audit WITHOUT the gate reads the
+    # in-flight references as unaccounted leaks — the corruption the
+    # exclude_after epoch exists to prevent.
+    c2 = DedupCluster.create(3, replicas=2, chunking=CH)
+    c2.write_object("a", base)
+    c2.tick(3)
+    observed2: dict = {}
+
+    def audit_mid_txn_ungated(event, ctx):
+        if event == "before_omap" and ctx.get("name") == "b" and not observed2:
+            r = RecoveryRound(c2)  # no exclude_after: judge everything
+            r.audit_refcounts()
+            observed2["ungated"] = r.report
+
+    c2.fault_injector = audit_mid_txn_ungated
+    c2.write_object("b", payload)
+    c2.fault_injector = None
+    assert observed2["ungated"].refs_over > 0, (
+        "without the gate the audit releases refs a transaction still owns"
+    )
+
+
 # ----------------------------------------------------- simtime link models
 def test_per_edge_link_model_charges_the_straggler_nic():
     """``modeled_time_clusterwide`` defaults to a max-over-links network
@@ -642,12 +920,33 @@ def _run_split_brain(split_seed: int) -> None:
             failed.append((name, data))
     for name, data in items:
         oracle.write_object(name, data)
+
+    # Tombstone schedules: deletes riding the OPEN partition. The delete
+    # commits its versioned tombstone on the primary's side only — the
+    # cross-side OMAP replica keeps the stale live entry, which recovery
+    # must beat by version (no resurrection). ``base3`` is additionally
+    # recreated after heal: the recreate's higher version must beat the
+    # tombstone right back, across the same split.
+    deleted: list[str] = []
+    recreated: tuple[str, bytes] | None = None
+    if split_seed % 3 != 0:
+        assert c.delete_object("base1")
+        assert oracle.delete_object("base1")
+        deleted.append("base1")
+    if split_seed % 3 == 2:
+        assert c.delete_object("base3")
+        assert oracle.delete_object("base3")
+        deleted.append("base3")
+        recreated = ("base3", rng.bytes(2048))
     assert c.transport.dropped > 0, "the partition must sever something"
 
     # heal; the client retries what failed (idempotent writes: exact)
     c.transport.policy = reliable()
     for name, data in failed:
         c.write_object(name, data)
+    if recreated is not None:
+        c.write_object(*recreated)
+        oracle.write_object(*recreated)
 
     if split_seed % 4 == 1:
         # fold in the PR 3 residual leak: applied-but-unacked op whose
@@ -666,6 +965,31 @@ def _run_split_brain(split_seed: int) -> None:
             seed=split_seed, p_drop=0.05, p_dup=0.1, p_reorder=0.05, p_ack_drop=0.08
         )
         c.transport.retry_budget = 12
+
+    mid: tuple[str, bytes] | None = None
+    if split_seed % 4 >= 2:
+        # write DURING recovery: a live write lands between the round's
+        # phases (what the always-on daemon interleaves with constantly);
+        # the audit defers the write's freshly-touched fingerprints
+        # (``exclude_after``) instead of misjudging them, and the follow-up
+        # full round below finishes the fixed point. Odd seeds in this
+        # bucket additionally ride the chaos policy set above.
+        c.tick(1)
+        r0 = RecoveryRound(c, exclude_after=c.now)
+        r0.repair_omap()
+        mid = ("mid", rng.bytes(2560))
+        for _ in range(6):
+            try:
+                c.write_object(*mid)
+                break
+            except WriteError:
+                continue
+        oracle.write_object(*mid)
+        r0.collect_digests()
+        r0.repair_chunks()
+        r0.audit_refcounts()
+        r0.reap_tombstones()
+        c.tick(1)
     report = c.recover()
     c.transport.policy = reliable()
     c.transport.retry_budget = 0
@@ -680,10 +1004,41 @@ def _run_split_brain(split_seed: int) -> None:
         f"split-brain seed {split_seed} diverged from the never-partitioned "
         f"oracle (repro: RECOVERY_SEED_BASE={split_seed} RECOVERY_SCHEDULES=1)"
     )
-    # zero seen-window pressure at default sizing, even through recovery
-    assert c.stats.seen_evictions == 0
-    for name, data in dict(items).items():
+    # measured seen-window margin at default sizing, even through recovery
+    assert_seen_window_margin(c)
+
+    expected = dict(items)
+    if mid is not None:
+        expected[mid[0]] = mid[1]
+    if recreated is not None:
+        expected[recreated[0]] = recreated[1]
+    for name in deleted:
+        if recreated is not None and name == recreated[0]:
+            continue  # recreated: readable again, checked below
+        with pytest.raises(ReadError):
+            c.read_object(name)
+        assert not c.delete_object(name), "tombstoned name must read as absent"
+    for name, data in expected.items():
         assert c.read_object(name) == data
+
+    # Age past the GC horizon on both sides: fully-acked tombstones reap
+    # everywhere, recreated names survive, and the clusters still agree.
+    still = [n for n in deleted if recreated is None or n != recreated[0]]
+    if still:
+        horizon = max(n.gc.tombstone_horizon for n in c.nodes.values())
+        c.tick(horizon + 1)
+        oracle.tick(horizon + 1)
+        rep_c = c.recover()
+        rep_o = oracle.recover()
+        assert rep_c.tombstones_reaped > 0 and rep_o.tombstones_reaped > 0
+        for name in still:
+            for n in c.nodes.values():
+                assert name not in n.shard.omap, "tombstone must be reaped"
+            for n in oracle.nodes.values():
+                assert name not in n.shard.omap
+        if recreated is not None:
+            assert c.read_object(recreated[0]) == recreated[1]
+        assert cluster_state(c) == cluster_state(oracle)
 
 
 def test_split_brain_recovery_converges_to_oracle(split_seed):
