@@ -29,6 +29,16 @@ from pathlib import Path
 DETERMINISTIC_COLUMNS = [
     ("cdc", "n_chunks"),
     ("cdc", "buf_mib"),
+    # fused device CDC + fingerprint: chunk count, the u32 checksum of all
+    # cut offsets and the one-launch-pair-per-save counters are exact
+    # functions of the seeded wave — drift means the device cut selection
+    # or the fusion contract changed
+    ("device_cdc", "buf_mib"),
+    ("device_cdc", "n_streams"),
+    ("device_cdc", "n_chunks"),
+    ("device_cdc", "boundary_checksum"),
+    ("device_cdc", "cdc_launches_per_save"),
+    ("device_cdc", "fp_launches_per_save"),
     ("fingerprint", "n_chunks"),
     ("fingerprint", "buf_mib"),
     ("write_path", "n_objects"),

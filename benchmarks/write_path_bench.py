@@ -81,6 +81,63 @@ def bench_fingerprint(buf_bytes: int) -> dict:
     }
 
 
+def bench_device_cdc(buf_bytes: int) -> dict:
+    """Fused device CDC + fingerprint pipeline: one CDC launch + one
+    fingerprint launch for a whole wave of tensor byte streams (the
+    checkpoint save shape). ``fused_mb_s`` is wall-clock (NOT gated);
+    ``n_chunks``, ``boundary_checksum`` (u32 sum of all inclusive cut
+    offsets) and the launches-per-save counters are exact functions of the
+    seeded wave + ChunkingSpec — any drift means the kernel's cut selection
+    or the fusion contract changed, and the bench gate holds them at
+    tolerance 0."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointConfig, DedupCheckpointer
+    from repro.core.chunking import cdc_mask
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(15)
+    # uneven wave: one dominant leaf + small stragglers, like a real pytree
+    weights = [8, 4, 2, 1, 1]
+    sizes = [max(1, buf_bytes * w // sum(weights)) for w in weights]
+    streams = [
+        jnp.asarray(rng.integers(0, 256, size=s, dtype=np.uint8)) for s in sizes
+    ]
+    target, mn, mx = 8 * 1024, 4 * 1024, 16 * 1024
+
+    def run():
+        res = kops.cdc_cut_and_fingerprint_many(
+            streams, mask=cdc_mask(target), min_size=mn, max_size=mx
+        )
+        jax.block_until_ready([r[2] for r in res])
+        return res
+
+    t, res = _best(run)
+    n_chunks = 0
+    checksum = np.uint64(0)
+    for cutpos, n_cuts, _, nc in res:
+        n_chunks += int(nc)
+        cp = np.asarray(jax.device_get(cutpos))[: int(n_cuts)].astype(np.uint64)
+        checksum = (checksum + cp.sum(dtype=np.uint64)) % np.uint64(1 << 32)
+    # launches-per-save through the checkpointer (the contract the fusion
+    # exists for: whole pytree, one launch pair)
+    cluster = DedupCluster.create(4, chunking=ChunkingSpec("fixed", 64 * 1024))
+    ckpt = DedupCheckpointer(
+        cluster, CheckpointConfig(fp_chunk_bytes=target, device_cdc=True)
+    )
+    ckpt.save("bench", {f"leaf{i}": s for i, s in enumerate(streams)})
+    return {
+        "buf_mib": buf_bytes / MB,
+        "n_streams": len(streams),
+        "fused_mb_s": buf_bytes / t / 1e6,
+        "n_chunks": n_chunks,
+        "boundary_checksum": int(checksum),
+        "cdc_launches_per_save": ckpt.stats["cdc_launches"],
+        "fp_launches_per_save": ckpt.stats["fp_launches"],
+    }
+
+
 def bench_write_path(n_objects: int, obj_bytes: int) -> dict:
     rng = np.random.default_rng(9)
     # ~50% duplicate content so the dedup path is exercised
@@ -264,17 +321,20 @@ def main() -> None:
     if args.quick:
         cdc_bytes, scalar_bytes = 1 * MB, 64 * 1024
         fp_bytes = 4 * MB
+        dev_cdc_bytes = 256 * 1024
         n_objects, obj_bytes = 40, 32 * 1024
         rec_objects, rec_bytes = 16, 8 * 1024
     else:
         cdc_bytes, scalar_bytes = 8 * MB, 256 * 1024
         fp_bytes = 32 * MB
+        dev_cdc_bytes = 2 * MB
         n_objects, obj_bytes = 200, 64 * 1024
         rec_objects, rec_bytes = 48, 16 * 1024
 
     report = {
         "quick": args.quick,
         "cdc": bench_cdc(cdc_bytes, scalar_bytes),
+        "device_cdc": bench_device_cdc(dev_cdc_bytes),
         "fingerprint": bench_fingerprint(fp_bytes),
         "write_path": bench_write_path(n_objects, obj_bytes),
         "recovery": bench_recovery(rec_objects, rec_bytes),

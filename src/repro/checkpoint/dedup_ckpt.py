@@ -35,6 +35,13 @@ class CheckpointConfig:
     prefix: str = "ckpt"
     device_fp_fastpath: bool = True
     fp_chunk_bytes: int = 512 * 1024
+    # Fused device pipeline: chunk (content-defined) + fingerprint every
+    # array leaf of the pytree in ONE CDC launch + ONE fingerprint launch
+    # per save wave. Off -> fixed-size chunking via
+    # fingerprint_tensor_chunks_many (still one fingerprint launch).
+    device_cdc: bool = True
+    cdc_min_bytes: int = 0      # 0 -> fp_chunk_bytes // 2
+    cdc_max_bytes: int = 0      # 0 -> fp_chunk_bytes * 2
 
 
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -76,7 +83,15 @@ class DedupCheckpointer:
         self.cfg = cfg or CheckpointConfig()
         # leafpath -> (device fp bytes, object name last written)
         self._last_device_fps: dict[str, tuple[bytes, str]] = {}
-        self.stats = {"leaves_written": 0, "leaves_ref_only": 0, "bytes_sent": 0}
+        self.stats = {
+            "leaves_written": 0,
+            "leaves_ref_only": 0,
+            "bytes_sent": 0,
+            # kernel-launch accounting for the device fast path: asserts the
+            # one-CDC-launch + one-fingerprint-launch-per-wave contract
+            "cdc_launches": 0,
+            "fp_launches": 0,
+        }
 
     # ------------------------------------------------------------------ save
     def save(self, name: str, tree: Any) -> dict[str, Any]:
@@ -118,24 +133,53 @@ class DedupCheckpointer:
         return manifest
 
     def _batch_device_fps(self, leaves: list[tuple[str, Any]]) -> dict[str, bytes]:
-        """Fingerprint every array leaf in one batched kernel call. Returns
-        leafpath -> raw fingerprint bytes; empty on any failure (callers fall
-        back to the per-leaf path)."""
+        """Chunk + fingerprint every array leaf of the wave on device —
+        with ``device_cdc`` the whole pytree goes through ONE fused CDC
+        launch plus ONE fingerprint launch (content-defined chunks); without
+        it, fixed-size chunking in one fingerprint launch. Returns leafpath
+        -> raw fingerprint bytes; empty on any failure (callers fall back to
+        the per-leaf path)."""
         if not self.cfg.device_fp_fastpath:
             return {}
         arr = [(k, leaf) for k, leaf in leaves if hasattr(leaf, "dtype")]
         if not arr:
             return {}
+        before = kops.launch_snapshot()
         try:
-            fps = kops.fingerprint_tensor_chunks_many(
-                [leaf for _, leaf in arr], self.cfg.fp_chunk_bytes
-            )
-            return {
-                k: np.asarray(jax.device_get(f)).tobytes()
-                for (k, _), f in zip(arr, fps)
-            }
+            if self.cfg.device_cdc:
+                out = self._fused_device_fps([leaf for _, leaf in arr])
+            else:
+                fps = kops.fingerprint_tensor_chunks_many(
+                    [leaf for _, leaf in arr], self.cfg.fp_chunk_bytes
+                )
+                out = [np.asarray(jax.device_get(f)).tobytes() for f in fps]
+            return {k: fp for (k, _), fp in zip(arr, out)}
         except Exception:
             return {}
+        finally:
+            after = kops.launch_snapshot()
+            self.stats["cdc_launches"] += after["cdc"] - before["cdc"]
+            self.stats["fp_launches"] += after["fingerprint"] - before["fingerprint"]
+
+    def _fused_device_fps(self, tensors: list[Any]) -> list[bytes]:
+        """One fused chunk+fingerprint wave over every tensor's byte stream.
+        Per-leaf fingerprint bytes = the concatenated per-chunk device
+        fingerprints (CDC chunk boundaries, so any content change perturbs
+        both the chunking and the fingerprints)."""
+        from repro.core.chunking import cdc_mask
+
+        target = self.cfg.fp_chunk_bytes
+        min_size = self.cfg.cdc_min_bytes or max(1, target // 2)
+        max_size = self.cfg.cdc_max_bytes or target * 2
+        streams = [kops.tensor_to_u8(t) for t in tensors]
+        res = kops.cdc_cut_and_fingerprint_many(
+            streams, mask=cdc_mask(target), min_size=min_size, max_size=max_size
+        )
+        out: list[bytes] = []
+        for _, _, fps, n_chunks in res:
+            nc = int(jax.device_get(n_chunks))
+            out.append(np.asarray(jax.device_get(fps))[:nc].tobytes())
+        return out
 
     def _ref_write(self, key: str, leaf, obj_name: str, fp_bytes: bytes | None = None) -> bool:
         """Device-fp fast path: if the tensor is unchanged since the last

@@ -213,11 +213,32 @@ def chunk_cdc(data: bytes, spec: ChunkingSpec, *, backend: str = "numpy") -> Ite
     """Windowed-gear CDC, vectorized. Boundary after position i when
     h(i) & mask == 0, subject to [min_size, max_size]. mask targets
     ~chunk_size averages. Boundaries are bit-identical to
-    ``chunk_cdc_scalar``."""
+    ``chunk_cdc_scalar``.
+
+    backend:
+      * "numpy"  — tiled host scan (default)
+      * "kernel" — window hashes on device, cut selection on host
+      * "device" — hashes AND cut selection on device in one fused launch
+                   (``repro.kernels.ops.cdc_cut_offsets``); only the final
+                   cut positions return to the host
+    """
     spec = spec.normalized()
-    cand = _cdc_candidates(data, cdc_mask(spec.chunk_size), backend=backend)
+    if backend == "device":
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        cuts: "np.ndarray | list[int]" = kops.cdc_cut_offsets(
+            jnp.asarray(np.frombuffer(data, dtype=np.uint8)),
+            mask=cdc_mask(spec.chunk_size),
+            min_size=spec.min_size,
+            max_size=spec.max_size,
+        ) if data else []
+    else:
+        cand = _cdc_candidates(data, cdc_mask(spec.chunk_size), backend=backend)
+        cuts = _cdc_cuts(cand, len(data), spec.min_size, spec.max_size)
     start = 0
-    for cut in _cdc_cuts(cand, len(data), spec.min_size, spec.max_size):
+    for cut in cuts:
         yield data[start : cut + 1]
         start = cut + 1
     if start < len(data):

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: windowed gear-hash CDC boundary detection.
+"""Pallas TPU kernels: windowed gear-hash CDC — boundary hashes AND cut
+selection, fully device-resident.
 
 GPU/CPU CDC rolls a hash byte-serially — useless on a vector unit. The TPU
 adaptation (DESIGN.md §2) exploits that a *windowed* gear hash at position i
@@ -11,8 +12,21 @@ per tile — pure VPU work, no sequential dependency. The wrapper does the
 256-entry gear-table gather in jnp (cheap, one take()) and hands the kernel a
 uint32 stream; each tile carries a W-1 halo on the left.
 
-VMEM: tile (8, TL+31) u32 in + (8, TL) u32 out; with TL=2048 that is
-~0.6 MB per step — double-buffered easily.
+``cdc_hashes_pallas`` stops there (hashes only; host selects cuts).
+``cdc_cut_masks_pallas`` fuses the whole CDC decision into ONE launch: each
+grid step recomputes the tile's window hashes, derives the boundary-candidate
+mask (hash & mask == 0) and then runs min/max-size cut selection as a
+scan-style loop whose carry — the position after the last emitted cut — lives
+in SMEM and persists across the sequential TPU grid (the ``lax.scan`` carry
+idiom, block-at-a-time). Per candidate the loop does one vector min-reduce
+over the tile, so cost is O(cuts_in_tile * tile); the selection is
+bit-identical to the scalar oracle ``chunk_cdc_scalar`` (proof sketch in
+docs/kernels.md). Streams are batched: grid = (stream, tile), the carry
+resets at tile 0 of every stream and per-stream byte lengths ride in SMEM.
+
+VMEM: hash tile (8, TL+31) u32 in + (8, TL) u32 out; with TL=2048 that is
+~0.6 MB per step — double-buffered easily. The cut kernel holds one
+(1, BLK+31) u32 tile plus a (1, BLK) bool mask: < 40 KB at BLK=8192.
 """
 
 from __future__ import annotations
@@ -21,7 +35,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import WINDOW
 
@@ -84,3 +100,148 @@ def cdc_boundaries_pallas(
     tvals: jnp.ndarray, mask: int, *, interpret: bool = False
 ) -> jnp.ndarray:
     return (cdc_hashes_pallas(tvals, interpret=interpret) & jnp.uint32(mask)) == 0
+
+
+# --------------------------------------------------------------------------
+# Fused hash + min/max-size cut selection (one launch per wave of streams).
+# --------------------------------------------------------------------------
+
+CUT_BLOCK_LEN = 8192   # positions per cut-selection grid step
+
+
+def _cdc_cut_kernel(
+    len_ref, tile_s_ref, tile_t_ref, th_ref, out_ref, carry_ref, *,
+    mask: int, min_size: int, max_size: int, block_len: int,
+):
+    """One grid step = one (1, BLK) tile. Streams of arbitrary (different)
+    lengths are concatenated tile-row-wise, so a wave wastes at most one
+    block of padding per stream instead of rectangular S x Lmax padding.
+
+    len_ref:    (S,) int32 per-stream byte lengths, SMEM.
+    tile_s_ref: (T_total,) int32 stream id of each tile row, SMEM.
+    tile_t_ref: (T_total,) int32 tile index *within* its stream, SMEM.
+    th_ref:     (1, BLK + W - 1) uint32 halo'd gear-table values.
+    out_ref:    (1, BLK) bool cut mask.
+    carry_ref:  (1,) int32 SMEM scratch — persists across the sequential
+                grid; holds the start of the current chunk (last cut + 1).
+    """
+    g = pl.program_id(0)
+    s = tile_s_ref[g]
+    t = tile_t_ref[g]
+
+    @pl.when(t == 0)
+    def _reset():
+        carry_ref[0] = 0
+
+    n = len_ref[s]
+    tv = th_ref[...]                                     # (1, BLK + W - 1)
+    blk = block_len
+    # Window hashes for this tile (same shifted-add scheme as _cdc_kernel).
+    h = jnp.zeros((1, blk), dtype=jnp.uint32)
+    for k in range(WINDOW):
+        seg = jax.lax.dynamic_slice_in_dim(tv, WINDOW - 1 - k, blk, axis=1)
+        h = h + (seg.astype(jnp.uint32) << jnp.uint32(k))
+    # Stream-local positions covered by this tile, and the candidate mask.
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1) + t * blk
+    cand = ((h & jnp.uint32(mask)) == 0) & (pos < n)
+    blk_end = t * blk + blk - 1
+    big = jnp.int32(2**30)
+
+    # Scan carry = start of the current chunk. Invariant on tile entry: no
+    # boundary candidate >= start + min_size exists before this tile (earlier
+    # tiles drained themselves), so searching within the tile is exact.
+    def _next_cut(sp):
+        lo = sp + min_size
+        hard = jnp.maximum(lo, sp + max_size - 1)
+        cmin = jnp.min(jnp.where(cand & (pos >= lo), pos, big))
+        return lo, jnp.minimum(cmin, hard)
+
+    def _cond(c):
+        sp, _ = c
+        lo, cut = _next_cut(sp)
+        return (lo < n) & (cut < n) & (cut <= blk_end)
+
+    def _body(c):
+        sp, out = c
+        _, cut = _next_cut(sp)
+        return cut + 1, out | (pos == cut)
+
+    s_fin, out = jax.lax.while_loop(
+        _cond, _body, (carry_ref[0], jnp.zeros((1, blk), jnp.bool_))
+    )
+    carry_ref[0] = s_fin
+    out_ref[...] = out
+
+
+def cdc_cut_masks_pallas(
+    tvals_list: list[jnp.ndarray],
+    *,
+    mask: int,
+    min_size: int,
+    max_size: int,
+    interpret: bool = False,
+    block_len: int = CUT_BLOCK_LEN,
+) -> list[jnp.ndarray]:
+    """Per-stream (n_i,) uint32 gear-table values -> per-stream (n_i,) bool
+    cut masks. Bit i of a stream is set iff the scalar oracle
+    ``chunk_cdc_scalar`` ends a chunk at byte i.
+
+    ONE launch for the whole wave: streams are tiled independently (so each
+    keeps its own zero-prefix hash window and its own scan carry) and their
+    tile rows concatenated; the grid walks all rows sequentially with the
+    carry in SMEM, resetting at tile 0 of every stream.
+    """
+    assert tvals_list and all(t.ndim == 1 for t in tvals_list)
+    assert min_size >= 1, "pass a normalized ChunkingSpec (min_size >= 1)"
+    assert max_size >= min_size
+    lens = [int(t.shape[0]) for t in tvals_list]
+    assert all(n > 0 for n in lens), "drop empty streams before the kernel"
+    blk = min(block_len, max(128, max(lens)))
+    tile_s: list[int] = []
+    tile_t: list[int] = []
+    bodies = []
+    for s, (tv, n) in enumerate(zip(tvals_list, lens)):
+        t_s = -(-n // blk)
+        body = jnp.pad(tv.astype(jnp.uint32), (0, t_s * blk - n)).reshape(t_s, blk)
+        bodies.append(body)
+        tile_s.extend([s] * t_s)
+        tile_t.extend(range(t_s))
+    body = jnp.concatenate(bodies)                       # (T_total, blk)
+    # Left halo per tile: last W-1 values of the previous tile of the SAME
+    # stream, zeros at tile 0 (short-prefix-window semantics at each
+    # stream's head). tile_t == 0 marks stream starts.
+    first = jnp.asarray(np.asarray(tile_t) == 0)[:, None]
+    prev_tail = jnp.concatenate(
+        [jnp.zeros((1, WINDOW - 1), jnp.uint32), body[:-1, -(WINDOW - 1):]]
+    )
+    halo = jnp.where(first, jnp.uint32(0), prev_tail)
+    haloed = jnp.concatenate([halo, body], axis=1)       # (T_total, blk+W-1)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _cdc_cut_kernel,
+            mask=mask, min_size=min_size, max_size=max_size, block_len=blk,
+        ),
+        grid=(len(tile_s),),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, blk + WINDOW - 1), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((len(tile_s), blk), jnp.bool_),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(
+        jnp.asarray(lens, jnp.int32),
+        jnp.asarray(tile_s, jnp.int32),
+        jnp.asarray(tile_t, jnp.int32),
+        haloed,
+    )
+    masks, row = [], 0
+    for n in lens:
+        t_s = -(-n // blk)
+        masks.append(out[row : row + t_s].reshape(-1)[:n])
+        row += t_s
+    return masks

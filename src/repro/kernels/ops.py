@@ -15,7 +15,7 @@ import numpy as np
 from repro.core.chunking import GEAR_TABLE
 from repro.core.fingerprint import Fingerprint, device_fp
 from repro.kernels import ref
-from repro.kernels.cdc import cdc_hashes_pallas
+from repro.kernels.cdc import cdc_cut_masks_pallas, cdc_hashes_pallas
 from repro.kernels.fingerprint import fingerprint_chunks_pallas
 
 
@@ -23,10 +23,27 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Semantic launch counters: one increment per wrapper call = one kernel
+# launch on the TPU route (the jnp fallbacks count identically so the
+# one-launch-per-wave contract is assertable everywhere). Python-side on
+# purpose: increments happen per *call*, not per trace.
+launch_counts = {"cdc": 0, "fingerprint": 0}
+
+
+def _count_launch(kind: str) -> None:
+    launch_counts[kind] += 1
+
+
+def launch_snapshot() -> dict[str, int]:
+    """Copy of the cumulative launch counters (for delta accounting)."""
+    return dict(launch_counts)
+
+
 def fingerprint_chunks(words: jnp.ndarray, *, use_pallas: bool | None = None) -> jnp.ndarray:
     """(n_chunks, n_words) uint32 -> (n_chunks, 4) uint32."""
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count_launch("fingerprint")
     if use_pallas:
         return fingerprint_chunks_pallas(words)
     return ref.fingerprint_chunks(words)
@@ -43,20 +60,33 @@ def _fingerprint_tensor_impl(flat_u32, *, chunk_words: int, use_pallas: bool):
 
 
 def tensor_to_u32(x: jnp.ndarray) -> jnp.ndarray:
-    """Bitcast any tensor to a flat uint32 stream (pad odd byte-width via u8)."""
+    """Bitcast any tensor to its flat little-endian uint32 stream.
+
+    4-byte dtypes bitcast 1:1; wider dtypes (f64/i64) split into itemsize//4
+    words each in memory order; sub-word dtypes (u8/bf16/f16) widen by
+    little-endian byte packing, zero-padded to a word multiple. Matches
+    ``np.frombuffer(arr.tobytes() + pad, "<u4")`` on the same values.
+    """
     flat = x.reshape(-1)
     nbytes = flat.dtype.itemsize
     if nbytes % 4 == 0:
-        per = nbytes // 4
-        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1) if per == 1 else (
-            jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1)
-        )
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1)
     # sub-word dtypes (u8/bf16/f16): widen via u8 packing
-    as_u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+    as_u8 = tensor_to_u8(flat)
     pad = (-as_u8.shape[0]) % 4
     as_u8 = jnp.pad(as_u8, (0, pad))
     g = as_u8.reshape(-1, 4).astype(jnp.uint32)
     return g[:, 0] | (g[:, 1] << 8) | (g[:, 2] << 16) | (g[:, 3] << 24)
+
+
+def tensor_to_u8(x: jnp.ndarray) -> jnp.ndarray:
+    """Bitcast any tensor to its flat byte stream, staying on device."""
+    flat = x.reshape(-1)
+    if flat.dtype == jnp.bool_:
+        flat = flat.astype(jnp.uint8)
+    if flat.dtype == jnp.uint8:
+        return flat
+    return jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
 
 
 def fingerprint_tensor_chunks(
@@ -71,6 +101,7 @@ def fingerprint_tensor_chunks(
         use_pallas = _on_tpu()
     chunk_words = max(128, chunk_bytes // 4)
     flat = tensor_to_u32(x)
+    _count_launch("fingerprint")
     return _fingerprint_tensor_impl(flat, chunk_words=chunk_words, use_pallas=use_pallas)
 
 
@@ -101,6 +132,7 @@ def fingerprint_tensor_chunks_many(
         rows.append(w)
         counts.append(w.shape[0])
     stacked = jnp.concatenate(rows, axis=0)
+    _count_launch("fingerprint")
     if use_pallas:
         fps = fingerprint_chunks_pallas(stacked)
     else:
@@ -119,13 +151,12 @@ def device_fps_to_host(fps_u32: jnp.ndarray) -> list[Fingerprint]:
     return [device_fp([int(w) for w in row]) for row in rows]
 
 
-_GEAR = None
+# Plain numpy constant: safe to close over from inside jit traces (a cached
+# jnp array would leak a tracer when first materialized inside a trace).
+_GEAR = np.array(GEAR_TABLE, dtype=np.uint32)
 
 
-def _gear_jnp() -> jnp.ndarray:
-    global _GEAR
-    if _GEAR is None:
-        _GEAR = jnp.asarray(np.array(GEAR_TABLE, dtype=np.uint32))
+def _gear_jnp() -> np.ndarray:
     return _GEAR
 
 
@@ -169,6 +200,7 @@ def cdc_window_hashes(
     if use_pallas is None:
         use_pallas = _on_tpu()
     tvals = jnp.take(_gear_jnp(), data_u8.astype(jnp.int32))
+    _count_launch("cdc")
     if use_pallas:
         return cdc_hashes_pallas(tvals)
     return ref.cdc_hashes(tvals)
@@ -180,3 +212,197 @@ def cdc_boundaries(
     """(n,) uint8 byte stream -> (n,) bool boundary mask."""
     h = cdc_window_hashes(data_u8, use_pallas=use_pallas)
     return (h & jnp.uint32(mask)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Device-resident CDC cut selection fused with fingerprinting: the whole
+# chunk-naming stage (window hashes -> min/max-size cut selection -> per-chunk
+# fingerprints) runs without leaving the device, in exactly ONE CDC launch and
+# ONE fingerprint launch per wave of streams.
+# ---------------------------------------------------------------------------
+
+
+def fp_row_words(max_size: int) -> tuple[int, int]:
+    """Fused-fingerprint row geometry for chunks up to ``max_size`` bytes.
+
+    Returns (payload_words, padded_width). A chunk's row is its bytes packed
+    little-endian into ``payload_words`` uint32 (zero-padded), the chunk's
+    byte length in the word right after the payload (so zero-extended chunks
+    of different lengths can never collide), then zero padding to a
+    lane-aligned ``padded_width``. Fingerprint of a chunk == ``ref.
+    fingerprint_chunks`` of its row — one fixed, kernel-friendly contract
+    shared by the device route and the host oracle in tests.
+    """
+    payload = -(-max_size // 4)
+    width = payload + 1
+    width = width + (-width) % 128
+    return payload, max(128, width)
+
+
+def _max_cuts(n: int, min_size: int) -> int:
+    """Static bound on the number of cuts in an n-byte stream: every cut
+    advances the chunk start by at least min_size + 1 bytes."""
+    return n // (min_size + 1) + 1
+
+
+def _chunk_rows(stream_u8, cut_mask, *, n: int, min_size: int, max_size: int):
+    """Segment-reduce one stream into fixed-width fingerprint rows.
+
+    Returns (rows (M, width) u32, cutpos (m_cut,) i32, n_cuts i32 scalar,
+    n_chunks i32 scalar) where M = _max_cuts(n) + 1 >= n_chunks; rows past
+    n_chunks are garbage and must be sliced off by the caller.
+    """
+    row_words, width = fp_row_words(max_size)
+    row_bytes = row_words * 4
+    m_cut = _max_cuts(n, min_size)
+    cutpos = jnp.nonzero(cut_mask, size=m_cut, fill_value=n)[0].astype(jnp.int32)
+    n_cuts = jnp.sum(cut_mask).astype(jnp.int32)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), cutpos + 1])
+    row_idx = jnp.arange(m_cut + 1, dtype=jnp.int32)
+    cut_ext = jnp.concatenate([cutpos, jnp.full((1,), n - 1, jnp.int32)])
+    ends = jnp.where(row_idx < n_cuts, cut_ext[row_idx], jnp.int32(n - 1))
+    lens = jnp.clip(ends - starts + 1, 0, row_bytes)
+    padded = jnp.pad(stream_u8, (0, row_bytes))
+    rows_u8 = jax.vmap(
+        lambda s: jax.lax.dynamic_slice(padded, (s,), (row_bytes,))
+    )(jnp.clip(starts, 0, n))
+    col = jnp.arange(row_bytes, dtype=jnp.int32)
+    rows_u8 = jnp.where(col[None, :] < lens[:, None], rows_u8, jnp.uint8(0))
+    g = rows_u8.reshape(-1, row_words, 4).astype(jnp.uint32)
+    words = g[:, :, 0] | (g[:, :, 1] << 8) | (g[:, :, 2] << 16) | (g[:, :, 3] << 24)
+    rows = (
+        jnp.zeros((m_cut + 1, width), jnp.uint32)
+        .at[:, :row_words].set(words)
+        .at[:, row_words].set(lens.astype(jnp.uint32))
+    )
+    # Tail chunk exists unless the last cut landed exactly on byte n-1.
+    n_chunks = n_cuts + (jnp.take(starts, n_cuts) < n).astype(jnp.int32)
+    return rows, cutpos, n_cuts, n_chunks
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mask", "min_size", "max_size", "use_pallas", "interpret", "block_len"
+    ),
+)
+def _cut_and_fp_impl(
+    streams, *, mask: int, min_size: int, max_size: int, use_pallas: bool,
+    interpret: bool, block_len: int,
+):
+    lens = [s.shape[0] for s in streams]
+    tvs = [jnp.take(_gear_jnp(), s.astype(jnp.int32)) for s in streams]
+    if use_pallas or interpret:
+        masks = cdc_cut_masks_pallas(
+            tvs, mask=mask, min_size=min_size, max_size=max_size,
+            interpret=interpret, block_len=block_len,
+        )
+    else:
+        # Per-stream hashing so each stream sees its own zero prefix window,
+        # exactly like the kernel's per-stream halo.
+        masks = [
+            ref.cdc_cut_mask(
+                (ref.cdc_hashes(tv) & jnp.uint32(mask)) == 0,
+                n, min_size, max_size,
+            )
+            for tv, n in zip(tvs, lens)
+        ]
+    per_stream = [
+        _chunk_rows(s, m, n=n, min_size=min_size, max_size=max_size)
+        for s, m, n in zip(streams, masks, lens)
+    ]
+    stacked = jnp.concatenate([rows for rows, _, _, _ in per_stream])
+    if use_pallas:
+        fps = fingerprint_chunks_pallas(stacked)
+    else:
+        fps = ref.fingerprint_chunks(stacked)
+    out, off = [], 0
+    for rows, cutpos, n_cuts, n_chunks in per_stream:
+        out.append((cutpos, n_cuts, fps[off : off + rows.shape[0]], n_chunks))
+        off += rows.shape[0]
+    return out
+
+
+def cdc_cut_and_fingerprint_many(
+    streams: list[jnp.ndarray],
+    *,
+    mask: int,
+    min_size: int,
+    max_size: int,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_len: int | None = None,
+) -> list[tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
+    """Chunk + fingerprint a wave of byte streams entirely on device.
+
+    streams: list of (n_i,) uint8 arrays (one per tensor/object). Boundaries
+    are bit-identical to ``chunk_cdc_scalar`` with the same mask/min/max;
+    fingerprints follow the ``fp_row_words`` row contract.
+
+    Returns, per stream: (cut_positions (M,) i32 — first ``n_cuts`` valid,
+    n_cuts i32 scalar, fps (R, 4) u32 — first ``n_chunks`` rows valid,
+    n_chunks i32 scalar). All on device: the caller decides when to sync.
+    Exactly one CDC launch + one fingerprint launch per call, regardless of
+    wave size (empty streams short-circuit without a launch).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if block_len is None:
+        from repro.kernels.cdc import CUT_BLOCK_LEN
+
+        block_len = CUT_BLOCK_LEN
+    assert min_size >= 1, "pass a normalized ChunkingSpec (min_size >= 1)"
+    zero = jnp.zeros((), jnp.int32)
+    empty = (
+        jnp.zeros((0,), jnp.int32), zero, jnp.zeros((0, 4), jnp.uint32), zero
+    )
+    nonempty = [s for s in streams if s.shape[0] > 0]
+    if not nonempty:
+        return [empty for _ in streams]
+    _count_launch("cdc")
+    _count_launch("fingerprint")
+    live = iter(
+        _cut_and_fp_impl(
+            tuple(nonempty), mask=mask, min_size=min_size, max_size=max_size,
+            use_pallas=use_pallas, interpret=interpret, block_len=block_len,
+        )
+    )
+    return [next(live) if s.shape[0] > 0 else empty for s in streams]
+
+
+def cdc_cut_and_fingerprint(
+    stream: jnp.ndarray, *, mask: int, min_size: int, max_size: int, **kw
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-stream ``cdc_cut_and_fingerprint_many``."""
+    return cdc_cut_and_fingerprint_many(
+        [stream], mask=mask, min_size=min_size, max_size=max_size, **kw
+    )[0]
+
+
+def cdc_cut_offsets(
+    data_u8: jnp.ndarray,
+    *,
+    mask: int,
+    min_size: int,
+    max_size: int,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> np.ndarray:
+    """Device cut selection -> host int64 cut positions (inclusive chunk
+    ends, tail excluded) — the device twin of ``chunking._cdc_cuts``."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    n = int(data_u8.shape[0])
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    _count_launch("cdc")
+    tvals = jnp.take(_gear_jnp(), data_u8.astype(jnp.int32))
+    if use_pallas or interpret:
+        m = cdc_cut_masks_pallas(
+            [tvals], mask=mask, min_size=min_size, max_size=max_size,
+            interpret=interpret,
+        )[0]
+    else:
+        cand = (ref.cdc_hashes(tvals) & jnp.uint32(mask)) == 0
+        m = ref.cdc_cut_mask(cand, n, min_size, max_size)
+    return np.flatnonzero(np.asarray(jax.device_get(m)))

@@ -6,6 +6,7 @@ must match them bit-exactly (uint32 wrap-around arithmetic everywhere).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -83,3 +84,52 @@ def cdc_hashes(tvals: jnp.ndarray) -> jnp.ndarray:
 
 def cdc_boundaries(tvals: jnp.ndarray, mask: int) -> jnp.ndarray:
     return (cdc_hashes(tvals) & jnp.uint32(mask)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Min/max-size cut selection over the candidate mask — the jnp oracle the
+# fused Pallas kernel (cdc.cdc_cut_mask_pallas) must match bit-exactly, which
+# in turn matches the scalar chunk_cdc_scalar loop:
+#
+#   start = 0
+#   repeat: lo = start + min_size; stop if lo >= n
+#           hard = max(lo, start + max_size - 1)
+#           cut  = first candidate >= lo if <= hard else hard
+#           stop if cut >= n; emit cut; start = cut + 1
+# ---------------------------------------------------------------------------
+
+
+def cdc_cut_mask(
+    cand: jnp.ndarray, n: int, min_size: int, max_size: int
+) -> jnp.ndarray:
+    """(m,) bool candidate mask (positions < n beyond which it is ignored)
+    -> (m,) bool cut mask, as a ``lax.while_loop`` with carry = chunk start.
+    """
+    assert cand.ndim == 1
+    m = cand.shape[0]
+    if m == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    cand = cand & (pos < n)
+    big = jnp.int32(2**30)
+
+    def _next_cut(sp):
+        lo = sp + min_size
+        hard = jnp.maximum(lo, sp + max_size - 1)
+        cmin = jnp.min(jnp.where(cand & (pos >= lo), pos, big))
+        return lo, jnp.minimum(cmin, hard)
+
+    def _cond(c):
+        sp, _ = c
+        lo, cut = _next_cut(sp)
+        return (lo < n) & (cut < n)
+
+    def _body(c):
+        sp, out = c
+        _, cut = _next_cut(sp)
+        return cut + 1, out | (pos == cut)
+
+    _, out = jax.lax.while_loop(
+        _cond, _body, (jnp.int32(0), jnp.zeros((m,), jnp.bool_))
+    )
+    return out

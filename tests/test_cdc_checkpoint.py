@@ -7,6 +7,8 @@ header that grows by a few bytes between framework versions)."""
 
 import os
 
+import pytest
+
 from repro.core import ChunkingSpec, DedupCluster
 
 
@@ -37,3 +39,41 @@ def test_cdc_chunk_boundaries_deterministic():
     b = chunk_object(data, spec)
     assert [len(x) for x in a] == [len(x) for x in b]
     assert b"".join(a) == data
+
+
+def test_checkpointer_one_launch_pair_per_save():
+    """The fused device pipeline must do exactly ONE CDC launch + ONE
+    fingerprint launch per save wave, no matter how many leaves the pytree
+    has — and the counters must surface in DedupCheckpointer.stats."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointConfig, DedupCheckpointer
+
+    cluster = DedupCluster.create(3, chunking=ChunkingSpec("fixed", 16 * 1024))
+    ckpt = DedupCheckpointer(
+        cluster, CheckpointConfig(fp_chunk_bytes=4096, device_cdc=True)
+    )
+    tree = {
+        "w": jnp.arange(12_000, dtype=jnp.float32),
+        "b": jnp.ones((257,), jnp.bfloat16),
+        "step": 3,  # non-array leaf: must not add launches
+        "emb": jnp.arange(5_000, dtype=jnp.int32),
+    }
+    assert ckpt.stats["cdc_launches"] == 0 and ckpt.stats["fp_launches"] == 0
+    ckpt.save("s1", tree)
+    assert ckpt.stats["cdc_launches"] == 1
+    assert ckpt.stats["fp_launches"] == 1
+    # second save of an identical tree: one more launch pair, all array
+    # leaves ref-only
+    ckpt.save("s2", tree)
+    assert ckpt.stats["cdc_launches"] == 2
+    assert ckpt.stats["fp_launches"] == 2
+    assert ckpt.stats["leaves_ref_only"] == 3
+    # legacy fixed-size route still books exactly one fingerprint launch
+    ckpt2 = DedupCheckpointer(
+        cluster, CheckpointConfig(fp_chunk_bytes=4096, device_cdc=False)
+    )
+    ckpt2.save("s3", tree)
+    assert ckpt2.stats["cdc_launches"] == 0
+    assert ckpt2.stats["fp_launches"] == 1

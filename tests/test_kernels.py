@@ -83,6 +83,48 @@ def test_cdc_boundary_mask():
     assert 1 / 1024 < frac < 1 / 64  # ~1/256 expected
 
 
+@pytest.mark.parametrize(
+    "dtype,shape",
+    [
+        ("uint8", (7,)), ("uint8", (128,)), ("uint8", (3, 5)),
+        ("bfloat16", (33,)), ("bfloat16", (16, 16)),
+        ("float16", (9,)), ("float16", (64,)),
+        ("float32", (1,)), ("float32", (17, 3)),
+        ("float64", (5,)), ("float64", (8, 8)),
+        ("int64", (3,)), ("int64", (31,)),
+        ("bool", (13,)),
+    ],
+)
+def test_tensor_to_u32_matches_numpy_bytes(dtype, shape):
+    """tensor_to_u32 must pack the tensor's raw little-endian bytes into
+    uint32 words — exactly np.frombuffer(arr.tobytes() + pad, '<u4') — for
+    every dtype, including the wide (f64/i64) and sub-word (u8/bool) paths."""
+    with jax.experimental.enable_x64(True):
+        n = int(np.prod(shape))
+        if dtype == "bool":
+            host = (RNG.integers(0, 2, size=shape) > 0)
+            t = jnp.asarray(host)
+        elif dtype == "bfloat16":
+            host16 = RNG.integers(0, 2**16, size=shape, dtype=np.uint16)
+            t = jnp.asarray(host16).view(jnp.bfloat16)
+            host = np.asarray(jax.device_get(t))
+        elif np.issubdtype(np.dtype(dtype), np.integer):
+            info = np.iinfo(dtype)
+            host = RNG.integers(info.min, info.max, size=shape, dtype=dtype)
+            t = jnp.asarray(host)
+        else:
+            host = RNG.standard_normal(n).reshape(shape).astype(dtype)
+            t = jnp.asarray(host)
+        raw = (host.astype(np.uint8) if dtype == "bool" else host).tobytes()
+        padded = raw + b"\0" * ((-len(raw)) % 4)
+        exp = np.frombuffer(padded, "<u4")
+        got = np.asarray(jax.device_get(ops.tensor_to_u32(t)))
+        np.testing.assert_array_equal(got, exp)
+        # and the u8 view must be the raw bytes themselves (unpadded)
+        got8 = np.asarray(jax.device_get(ops.tensor_to_u8(t)))
+        np.testing.assert_array_equal(got8, np.frombuffer(raw, np.uint8))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32, jnp.int8, jnp.float16])
 def test_tensor_fingerprint_dtypes(dtype):
     t = jnp.asarray(RNG.standard_normal((32, 64)) * 10).astype(dtype)
