@@ -54,6 +54,26 @@ DETERMINISTIC_COLUMNS = [
     ("write_path", "net_bytes_coalesced"),
     ("write_path", "ack_bytes_coalesced"),
     ("write_path", "retransmits_coalesced"),
+    # presence-cache probe elision at 50% dup, cache on vs off: lookup /
+    # elision / message / byte counts and the peak dirty-bytes bound are
+    # exact functions of the seeded two-batch workload — drift means the
+    # elision accounting, the wave shape, or the cache policy changed
+    ("write_cache", "n_objects"),
+    ("write_cache", "obj_kib"),
+    ("write_cache", "dedup_ratio"),
+    ("write_cache", "lookups_cache_off"),
+    ("write_cache", "lookups_cache_on"),
+    ("write_cache", "probe_elisions"),
+    ("write_cache", "elision_rate"),
+    ("write_cache", "cache_hits"),
+    ("write_cache", "cache_evictions"),
+    ("write_cache", "control_msgs_cache_off"),
+    ("write_cache", "control_msgs_cache_on"),
+    ("write_cache", "net_bytes_cache_off"),
+    ("write_cache", "net_bytes_cache_on"),
+    ("write_cache", "presence_fallbacks"),
+    ("write_cache", "peak_dirty_bytes_cache_on"),
+    ("write_cache", "wave_bytes"),
     # recovery round (split-brain heal): message/byte counts and both
     # modeled-time link models are exact functions of the seeded schedule;
     # only recovery_wall_s is noise (and is not listed here)

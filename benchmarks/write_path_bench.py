@@ -185,8 +185,11 @@ def bench_write_path(n_objects: int, obj_bytes: int) -> dict:
     for other in (cb, cc):
         assert cs.dedup_ratio() == other.dedup_ratio(), "dedup ratio must match serial"
         assert cs.unique_bytes_stored() == other.unique_bytes_stored()
-    assert cc.stats.control_msgs < cb.stats.control_msgs
-    assert cc.stats.net_bytes <= cb.stats.net_bytes
+    snap_s, snap_b, snap_c = (
+        cs.stats.snapshot(), cb.stats.snapshot(), cc.stats.snapshot()
+    )
+    assert snap_c["control_msgs"] < snap_b["control_msgs"]
+    assert snap_c["net_bytes"] <= snap_b["net_bytes"]
     return {
         "n_objects": n_objects,
         "obj_kib": obj_bytes / 1024,
@@ -196,17 +199,76 @@ def bench_write_path(n_objects: int, obj_bytes: int) -> dict:
         "speedup": t_serial / t_batched,
         "coalesced_speedup": t_serial / t_coalesced,
         "dedup_ratio": cc.dedup_ratio(),
-        "control_msgs_serial": cs.stats.control_msgs,
-        "control_msgs_batched": cb.stats.control_msgs,
-        "control_msgs_coalesced": cc.stats.control_msgs,
+        "control_msgs_serial": snap_s["control_msgs"],
+        "control_msgs_batched": snap_b["control_msgs"],
+        "control_msgs_coalesced": snap_c["control_msgs"],
         "chunk_msgs_serial": cs.transport.msgs_by_type.get("chunk_op_batch", 0),
         "chunk_msgs_batched": cb.transport.msgs_by_type.get("chunk_op_batch", 0),
         "chunk_msgs_coalesced": cc.transport.msgs_by_type.get("chunk_op_batch", 0),
-        "net_bytes_batched": cb.stats.net_bytes,
-        "net_bytes_coalesced": cc.stats.net_bytes,
+        "net_bytes_batched": snap_b["net_bytes"],
+        "net_bytes_coalesced": snap_c["net_bytes"],
         # at-least-once accounting: every delivery acked; reliable run -> 0 retries
-        "ack_bytes_coalesced": cc.stats.ack_bytes,
-        "retransmits_coalesced": cc.stats.retransmits,
+        "ack_bytes_coalesced": snap_c["ack_bytes"],
+        "retransmits_coalesced": snap_c["retransmits"],
+    }
+
+
+def bench_write_cache(n_objects: int, obj_bytes: int) -> dict:
+    """Presence-cache probe elision at ~50% duplicate content, cache on vs
+    off. Two batches through one session: batch 2 rewrites batch 1's
+    content pool under new names, so every batch-2 chunk is a cross-batch
+    repeat only the presence cache can turn into a presence-asserted
+    ref-only op. Both runs stream in bounded waves, so intra-batch repeats
+    are ref-only via the wave-local first-writer set either way — the
+    lookup/elision delta isolates the cache's contribution. Every column
+    except the throughput one is a deterministic function of the workload
+    and the wire model — the bench gate holds them at tolerance 0."""
+    rng = np.random.default_rng(9)
+    pool = [rng.bytes(obj_bytes) for _ in range(max(2, n_objects // 2))]
+    batch1 = [(f"a{i}", pool[i % len(pool)]) for i in range(n_objects)]
+    batch2 = [(f"b{i}", pool[i % len(pool)]) for i in range(n_objects)]
+    spec = ChunkingSpec("cdc", 8 * 1024)
+    wave = max(4 * obj_bytes, 64 * 1024)
+
+    def run(presence):
+        c = DedupCluster.create(8, chunking=spec)
+        s = c.client(presence_cache=presence, wave_bytes=wave)
+        s.put_many(list(batch1))
+        s.put_many(list(batch2))
+        return c
+
+    c_off = run(0)  # warmup is also the cache-off reference
+    t_on, c_on = _best(lambda: run(4096))
+    off, on = c_off.stats.snapshot(), c_on.stats.snapshot()
+    assert c_off.dedup_ratio() == c_on.dedup_ratio(), (
+        "presence elision must not change what is stored"
+    )
+    assert on["probe_elisions"] > 0
+    assert on["lookup_unicasts"] < off["lookup_unicasts"], (
+        "cache-on must carry strictly fewer CIT probes"
+    )
+    assert (
+        on["lookup_unicasts"] + on["probe_elisions"] == off["lookup_unicasts"]
+    ), "every elision accounts for exactly one skipped probe"
+    assert on["presence_fallbacks"] == 0, "no invalidations here -> no fallbacks"
+    return {
+        "n_objects": 2 * n_objects,
+        "obj_kib": obj_bytes / 1024,
+        "cache_on_objects_s": 2 * n_objects / t_on,  # wall clock; NOT gated
+        "dedup_ratio": c_on.dedup_ratio(),
+        "lookups_cache_off": off["lookup_unicasts"],
+        "lookups_cache_on": on["lookup_unicasts"],
+        "probe_elisions": on["probe_elisions"],
+        "elision_rate": on["probe_elisions"] / off["lookup_unicasts"],
+        "cache_hits": on["cache_hits"],
+        "cache_evictions": on["cache_evictions"],
+        "control_msgs_cache_off": off["control_msgs"],
+        "control_msgs_cache_on": on["control_msgs"],
+        "net_bytes_cache_off": off["net_bytes"],
+        "net_bytes_cache_on": on["net_bytes"],
+        "presence_fallbacks": on["presence_fallbacks"],
+        "peak_dirty_bytes_cache_on": on["peak_dirty_bytes"],
+        "wave_bytes": wave,
     }
 
 
@@ -337,6 +399,7 @@ def main() -> None:
         "device_cdc": bench_device_cdc(dev_cdc_bytes),
         "fingerprint": bench_fingerprint(fp_bytes),
         "write_path": bench_write_path(n_objects, obj_bytes),
+        "write_cache": bench_write_cache(n_objects, obj_bytes),
         "recovery": bench_recovery(rec_objects, rec_bytes),
         "always_on": bench_always_on(rec_objects, rec_bytes),
     }

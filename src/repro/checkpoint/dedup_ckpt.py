@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.core import DedupCluster, ReadError
+from repro.core.chunking import ChunkSpec
 from repro.kernels import ops as kops
 
 
@@ -34,14 +35,37 @@ from repro.kernels import ops as kops
 class CheckpointConfig:
     prefix: str = "ckpt"
     device_fp_fastpath: bool = True
+    # Consolidated chunking surface for the device-fingerprint fast path:
+    # kind "cdc" + device=True runs the fused chunk+fingerprint pipeline
+    # (ONE CDC launch + ONE fingerprint launch per save wave); kind "fixed"
+    # runs fixed-size chunking via fingerprint_tensor_chunks_many (still
+    # one fingerprint launch). When unset, built from the legacy fields
+    # below (accepted and mapped for one release).
+    chunk_spec: ChunkSpec | None = None
+    # Legacy chunking spelling (.. deprecated:: prefer ``chunk_spec``):
     fp_chunk_bytes: int = 512 * 1024
-    # Fused device pipeline: chunk (content-defined) + fingerprint every
-    # array leaf of the pytree in ONE CDC launch + ONE fingerprint launch
-    # per save wave. Off -> fixed-size chunking via
-    # fingerprint_tensor_chunks_many (still one fingerprint launch).
     device_cdc: bool = True
     cdc_min_bytes: int = 0      # 0 -> fp_chunk_bytes // 2
     cdc_max_bytes: int = 0      # 0 -> fp_chunk_bytes * 2
+    # Streaming ingest: bound the transport wave (and peak host dirty-chunk
+    # bytes) for the batched leaf write — the whole checkpoint no longer
+    # materializes at once; wave k is on the wire while wave k+1 chunks.
+    # 0 = one wave for the whole checkpoint (the legacy shape).
+    wave_bytes: int = 0
+    # Fingerprint presence-cache capacity for the writing session (0 = off):
+    # repeat saves elide CIT probes for chunks the session has positive
+    # evidence for (see docs/write_cache.md).
+    presence_cache: int = 0
+
+    def resolved_chunk_spec(self) -> ChunkSpec:
+        if self.chunk_spec is not None:
+            return self.chunk_spec
+        return ChunkSpec.for_checkpoint(
+            self.fp_chunk_bytes,
+            min_bytes=self.cdc_min_bytes,
+            max_bytes=self.cdc_max_bytes,
+            device=self.device_cdc,
+        )
 
 
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -81,6 +105,17 @@ class DedupCheckpointer:
     def __init__(self, cluster: DedupCluster, cfg: CheckpointConfig | None = None):
         self.cluster = cluster
         self.cfg = cfg or CheckpointConfig()
+        self.spec = self.cfg.resolved_chunk_spec()
+        # The writing session: a dedicated DedupClient when streaming waves
+        # or a presence cache are configured, else the cluster's default
+        # (cache-disabled) session — byte-for-byte the legacy write path.
+        if self.cfg.wave_bytes or self.cfg.presence_cache:
+            self.session = cluster.client(
+                presence_cache=self.cfg.presence_cache,
+                wave_bytes=self.cfg.wave_bytes,
+            )
+        else:
+            self.session = None
         # leafpath -> (device fp bytes, object name last written)
         self._last_device_fps: dict[str, tuple[bytes, str]] = {}
         self.stats = {
@@ -119,9 +154,18 @@ class DedupCheckpointer:
         # commits items in order and raises at the first failure, so the
         # writes_ok delta counts exactly the committed leaves — including on
         # a mid-batch failure.
+        # With ``wave_bytes`` set the session streams the batch in bounded
+        # waves instead (chunk+fingerprint wave k+1 while wave k's batches
+        # are on the wire; O(wave) host dirty bytes), and a configured
+        # presence cache elides CIT probes for chunks repeated across saves.
+        writer = (
+            self.session.put_many
+            if self.session is not None
+            else self.cluster.write_objects
+        )
         ok_before = self.cluster.stats.writes_ok
         try:
-            self.cluster.write_objects(
+            writer(
                 full_writes + [(f"{self.cfg.prefix}/{name}/MANIFEST", mbytes)]
             )
         finally:
@@ -146,11 +190,11 @@ class DedupCheckpointer:
             return {}
         before = kops.launch_snapshot()
         try:
-            if self.cfg.device_cdc:
+            if self.spec.kind == "cdc":
                 out = self._fused_device_fps([leaf for _, leaf in arr])
             else:
                 fps = kops.fingerprint_tensor_chunks_many(
-                    [leaf for _, leaf in arr], self.cfg.fp_chunk_bytes
+                    [leaf for _, leaf in arr], self.spec.target_bytes
                 )
                 out = [np.asarray(jax.device_get(f)).tobytes() for f in fps]
             return {k: fp for (k, _), fp in zip(arr, out)}
@@ -166,15 +210,8 @@ class DedupCheckpointer:
         Per-leaf fingerprint bytes = the concatenated per-chunk device
         fingerprints (CDC chunk boundaries, so any content change perturbs
         both the chunking and the fingerprints)."""
-        from repro.core.chunking import cdc_mask
-
-        target = self.cfg.fp_chunk_bytes
-        min_size = self.cfg.cdc_min_bytes or max(1, target // 2)
-        max_size = self.cfg.cdc_max_bytes or target * 2
         streams = [kops.tensor_to_u8(t) for t in tensors]
-        res = kops.cdc_cut_and_fingerprint_many(
-            streams, mask=cdc_mask(target), min_size=min_size, max_size=max_size
-        )
+        res = kops.cdc_cut_and_fingerprint_many(streams, spec=self.spec)
         out: list[bytes] = []
         for _, _, fps, n_chunks in res:
             nc = int(jax.device_get(n_chunks))
@@ -190,7 +227,7 @@ class DedupCheckpointer:
             return False
         if fp_bytes is None:
             try:
-                fps = kops.fingerprint_tensor_chunks(leaf, self.cfg.fp_chunk_bytes)
+                fps = kops.fingerprint_tensor_chunks(leaf, self.spec.target_bytes)
                 fp_bytes = np.asarray(jax.device_get(fps)).tobytes()
             except Exception:
                 return False

@@ -2,17 +2,27 @@
 
 Public API:
     DedupCluster.create(n_nodes, replicas=..., chunking=...)
-    cluster.write_object / write_objects / read_object / delete_object
+    cluster.client(presence_cache=..., wave_bytes=...) -> DedupClient
+    client.put / put_many / get / delete / flush / close
+    cluster.write_object / write_objects  (deprecated shims over a default
+        cache-disabled client session) / read_object / delete_object
     cluster.add_node / remove_node / scrub / run_gc / tick
-    ClusterMap, ChunkingSpec, Fingerprint, fingerprint_many
+    ClusterMap, ChunkSpec, ChunkingSpec, Fingerprint, fingerprint_many
 """
 
-from repro.core.chunking import ChunkingSpec, chunk_object, window_hashes
+from repro.core.chunking import ChunkSpec, ChunkingSpec, chunk_object, window_hashes
+from repro.core.client import DedupClient
 from repro.core.cluster import (
     DedupCluster,
     ReadError,
     TransactionAbort,
     WriteError,
+)
+from repro.core.write_cache import (
+    PRESENCE_OUTCOMES,
+    PendingWrites,
+    PresenceCache,
+    WriteBackCache,
 )
 from repro.core.baselines import (
     CentralDedupCluster,
@@ -40,6 +50,8 @@ from repro.core.messages import (
     OmapDelete,
     OmapGet,
     OmapPut,
+    PRESENCE_FP_BYTES,
+    PresenceInvalidate,
     RawPut,
     RefAudit,
     RefOnlyWrite,
@@ -80,11 +92,17 @@ from repro.core.fingerprint import (
 from repro.core.placement import ClusterMap, place, primary
 
 __all__ = [
+    "ChunkSpec",
     "ChunkingSpec",
     "chunk_object",
     "window_hashes",
     "fingerprint_many",
+    "DedupClient",
     "DedupCluster",
+    "PRESENCE_OUTCOMES",
+    "PendingWrites",
+    "PresenceCache",
+    "WriteBackCache",
     "CentralDedupCluster",
     "DiskLocalDedupCluster",
     "NoDedupCluster",
@@ -123,6 +141,8 @@ __all__ = [
     "OmapDelete",
     "OmapGet",
     "OmapPut",
+    "PRESENCE_FP_BYTES",
+    "PresenceInvalidate",
     "RawPut",
     "RefAudit",
     "RefOnlyWrite",

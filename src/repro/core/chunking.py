@@ -204,6 +204,101 @@ class ChunkingSpec:
         return self
 
 
+@dataclass(frozen=True)
+class ChunkSpec:
+    """The consolidated chunking-parameter surface.
+
+    Each layer used to spell the same knobs its own way: core took
+    ``ChunkingSpec`` (0 min/max defaulting to ``target//4``/``target*4``),
+    the checkpointer took ``fp_chunk_bytes``/``device_cdc``/
+    ``cdc_min_bytes``/``cdc_max_bytes`` (defaulting to ``//2``/``*2``),
+    and the device kernels took raw ``mask``/``min_size``/``max_size``
+    kwargs. A ``ChunkSpec`` holds the FULLY RESOLVED values once — the
+    constructors encode each legacy defaulting convention, so existing
+    call sites keep their exact boundaries — and every consumer
+    (``chunk_object``, ``kernels.ops.cdc_*(spec=...)``,
+    ``CheckpointConfig.chunk_spec``) accepts it directly. The legacy
+    spellings are still accepted and mapped for one release.
+
+    ``device`` marks specs whose CDC hash + cut selection should run as
+    the fused on-device launch rather than the host numpy scan."""
+
+    kind: str = "fixed"                    # "fixed" | "cdc"
+    target_bytes: int = DEFAULT_CHUNK_SIZE
+    min_bytes: int = 0                     # cdc only; resolved, never 0 for cdc
+    max_bytes: int = 0
+    device: bool = False
+
+    @property
+    def mask(self) -> int:
+        """Boundary mask targeting ~target_bytes average CDC chunks."""
+        return cdc_mask(self.target_bytes)
+
+    @classmethod
+    def fixed(cls, target_bytes: int = DEFAULT_CHUNK_SIZE) -> "ChunkSpec":
+        return cls("fixed", target_bytes)
+
+    @classmethod
+    def cdc(
+        cls,
+        target_bytes: int,
+        *,
+        min_bytes: int = 0,
+        max_bytes: int = 0,
+        device: bool = False,
+    ) -> "ChunkSpec":
+        """Core convention: unset min/max default to target//4 / target*4
+        (matches ``ChunkingSpec.normalized``)."""
+        return cls(
+            "cdc",
+            target_bytes,
+            min_bytes or target_bytes // 4,
+            max_bytes or target_bytes * 4,
+            device,
+        )
+
+    @classmethod
+    def for_checkpoint(
+        cls,
+        fp_chunk_bytes: int,
+        *,
+        min_bytes: int = 0,
+        max_bytes: int = 0,
+        device: bool = True,
+    ) -> "ChunkSpec":
+        """Checkpoint convention: unset min/max default to fp_chunk_bytes//2
+        / fp_chunk_bytes*2 (matches the legacy ``CheckpointConfig`` fields);
+        ``device=False`` maps legacy ``device_cdc=False`` to fixed-size
+        chunking, exactly what the fp fast path did."""
+        if not device:
+            return cls("fixed", fp_chunk_bytes)
+        return cls(
+            "cdc",
+            fp_chunk_bytes,
+            min_bytes or max(1, fp_chunk_bytes // 2),
+            max_bytes or fp_chunk_bytes * 2,
+            True,
+        )
+
+    @classmethod
+    def from_chunking(
+        cls, spec: "ChunkingSpec", *, device: bool = False
+    ) -> "ChunkSpec":
+        s = spec.normalized()
+        return cls(s.kind, s.chunk_size, s.min_size, s.max_size, device)
+
+    def to_chunking(self) -> "ChunkingSpec":
+        return ChunkingSpec(self.kind, self.target_bytes, self.min_bytes, self.max_bytes)
+
+    def kernel_kwargs(self) -> dict:
+        """The raw kwargs the device kernels spell chunking in."""
+        return {
+            "mask": self.mask,
+            "min_size": self.min_bytes,
+            "max_size": self.max_bytes,
+        }
+
+
 def chunk_fixed(data: bytes, chunk_size: int = DEFAULT_CHUNK_SIZE) -> Iterator[bytes]:
     for off in range(0, len(data), chunk_size):
         yield data[off : off + chunk_size]
@@ -265,12 +360,16 @@ def chunk_cdc_scalar(data: bytes, spec: ChunkingSpec) -> Iterator[bytes]:
         yield data[start:]
 
 
-def chunk_object(data: bytes, spec: ChunkingSpec | None = None) -> list[bytes]:
+def chunk_object(data: bytes, spec: "ChunkingSpec | ChunkSpec | None" = None) -> list[bytes]:
+    backend = "numpy"
+    if isinstance(spec, ChunkSpec):
+        backend = "device" if spec.device else "numpy"
+        spec = spec.to_chunking()
     spec = (spec or ChunkingSpec()).normalized()
     if spec.kind == "fixed":
         out = list(chunk_fixed(data, spec.chunk_size))
     elif spec.kind == "cdc":
-        out = list(chunk_cdc(data, spec))
+        out = list(chunk_cdc(data, spec, backend=backend))
     else:
         raise ValueError(f"unknown chunking kind {spec.kind!r}")
     if data and not out:

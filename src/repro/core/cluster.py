@@ -41,11 +41,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable
 
-from repro.core.chunking import ChunkingSpec, chunk_object
+from repro.core.chunking import ChunkingSpec
 from repro.core.dmshard import OMAPEntry
 from repro.core.fingerprint import (
     Fingerprint,
-    fingerprint_many,
     name_fp,
     object_fp,
 )
@@ -58,6 +57,7 @@ from repro.core.messages import (
     OmapDelete,
     OmapGet,
     OmapPut,
+    PresenceInvalidate,
     RefOnlyWrite,
     TxnCancel,
 )
@@ -96,6 +96,16 @@ class ClusterStats:
         self.reads_ok = 0
         self.rebalance_bytes_moved = 0
         self.rebalance_chunks_moved = 0
+        # Write-back / presence cache counters (core/write_cache.py). The
+        # caches of every DedupClient session on this cluster accumulate
+        # here, so the columns are cluster-wide and survive session close.
+        self.probe_elisions = 0        # CIT probes elided by presence hits
+        self.cache_hits = 0            # presence-cache hits at plan time
+        self.cache_misses = 0          # presence-cache misses at plan time
+        self.cache_evictions = 0       # LRU evictions from presence caches
+        self.cache_invalidations = 0   # fps dropped by PresenceInvalidate
+        self.presence_fallbacks = 0    # stale presence -> byte resends
+        self.peak_dirty_bytes = 0      # high-water dirty chunk bytes (host)
 
     @property
     def net_bytes(self) -> int:
@@ -165,6 +175,40 @@ class ClusterStats:
             (n.stats.seen_high_water for n in self._nodes.values()), default=0
         )
 
+    def snapshot(self) -> dict:
+        """One-call dict view of every counter — the stable consumption
+        surface for benches and ``check_bench_regression.py`` (preferred
+        over attribute-poking, which couples callers to which counters are
+        plain fields vs transport views). Keys are the attribute names;
+        values are plain ints, safe to serialize."""
+        return {
+            "logical_bytes_written": self.logical_bytes_written,
+            "writes_ok": self.writes_ok,
+            "writes_failed": self.writes_failed,
+            "reads_ok": self.reads_ok,
+            "rebalance_bytes_moved": self.rebalance_bytes_moved,
+            "rebalance_chunks_moved": self.rebalance_chunks_moved,
+            "net_bytes": self.net_bytes,
+            "control_msgs": self.control_msgs,
+            "lookup_unicasts": self.lookup_unicasts,
+            "lookup_broadcasts": self.lookup_broadcasts,
+            "retransmits": self.retransmits,
+            "acks": self.acks,
+            "ack_bytes": self.ack_bytes,
+            "msgs_dropped": self.msgs_dropped,
+            "duplicate_deliveries": self.duplicate_deliveries,
+            "timeout_ticks_waited": self.timeout_ticks_waited,
+            "seen_evictions": self.seen_evictions,
+            "seen_high_water": self.seen_high_water,
+            "probe_elisions": self.probe_elisions,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_evictions": self.cache_evictions,
+            "cache_invalidations": self.cache_invalidations,
+            "presence_fallbacks": self.presence_fallbacks,
+            "peak_dirty_bytes": self.peak_dirty_bytes,
+        }
+
     def __repr__(self) -> str:  # debugging convenience
         return (
             f"ClusterStats(logical={self.logical_bytes_written}, "
@@ -201,6 +245,15 @@ class DedupCluster:
     retry_budget: int | None = None
     ack_timeout: int | None = None
     _txn_counter: int = 0
+    # DedupClient sessions with a presence cache, keyed by session id —
+    # the fan-out targets of PresenceInvalidate (delete/GC/reap). Sessions
+    # register via ``_register_session`` (done by DedupClient itself);
+    # cache-disabled sessions never register, so clusters without presence
+    # caching see zero extra messages or handlers.
+    _sessions: dict = field(default_factory=dict)
+    _session_seq: int = 0
+    _pending_inval: list = field(default_factory=list)
+    _default_session: object | None = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.transport is None:
@@ -252,9 +305,81 @@ class DedupCluster:
             self.transport.advance(self.now)
             for n in self.nodes.values():
                 n.tick(self.now)
+        self._flush_presence_invalidations()
 
     def run_gc(self) -> dict[str, list[Fingerprint]]:
-        return {nid: n.run_gc(self.now) for nid, n in self.nodes.items()}
+        removed = {nid: n.run_gc(self.now) for nid, n in self.nodes.items()}
+        # Each node's GC hook queued its reclaimed fps (when sessions are
+        # registered); fan the invalidations out now, after every node ran.
+        self._flush_presence_invalidations()
+        return removed
+
+    # -------------------------------------------------- client sessions
+    def client(self, presence_cache: int = 0, wave_bytes: int = 0):
+        """Open a ``DedupClient`` session on this cluster — the public
+        write/read surface (``put/put_many/get/delete/flush/close``)."""
+        from repro.core.client import DedupClient
+
+        return DedupClient(
+            self, presence_cache=presence_cache, wave_bytes=wave_bytes
+        )
+
+    def _default_client(self):
+        """The cache-disabled session backing the legacy
+        ``write_object``/``write_objects`` shims."""
+        if self._default_session is None:
+            self._default_session = self.client()
+        return self._default_session
+
+    def _register_session(self, session) -> None:
+        """Register a presence-caching session as an invalidation fan-out
+        target: it becomes addressable on the transport (under its session
+        id) and every node's GC gains a reclaim hook feeding the
+        invalidation queue."""
+        if session.session_id is None:
+            session.session_id = f"session{self._session_seq}"
+            self._session_seq += 1
+        self._sessions[session.session_id] = session
+        self.transport.extra_handlers[session.session_id] = session
+        self._wire_gc_hooks()
+
+    def _unregister_session(self, session) -> None:
+        self._sessions.pop(session.session_id, None)
+        self.transport.extra_handlers.pop(session.session_id, None)
+
+    def _wire_gc_hooks(self) -> None:
+        for nid, n in self.nodes.items():
+            if n.gc.on_reclaim is None:
+                n.gc.on_reclaim = (
+                    lambda fps, _nid=nid: self._queue_presence_invalidation(
+                        _nid, fps
+                    )
+                )
+
+    def _queue_presence_invalidation(self, nid: str, fps) -> None:
+        if self._sessions and fps:
+            self._pending_inval.append((nid, tuple(fps)))
+
+    def _flush_presence_invalidations(self) -> None:
+        if not self._pending_inval:
+            return
+        pending, self._pending_inval = self._pending_inval, []
+        for nid, fps in pending:
+            self._invalidate_presence(nid, fps, "gc")
+
+    def _invalidate_presence(self, src: str, fps, reason: str) -> None:
+        """Fan a ``PresenceInvalidate`` out to every registered session.
+        Best-effort on purpose: a lost/partitioned invalidation leaves
+        stale presence, which the receiver-side validation of presence
+        ops degrades to a fallback byte resend — never a dangling ref."""
+        if not self._sessions or not fps:
+            return
+        msg = PresenceInvalidate(tuple(fps), reason)
+        for sid in list(self._sessions):
+            try:
+                self.transport.send(src, sid, msg, self.now)
+            except (MessageDropped, NodeDown):
+                pass
 
     # -------------------------------------------------------------- fault hook
     def _fault(self, event: str, **ctx) -> None:
@@ -277,77 +402,29 @@ class DedupCluster:
     # ----------------------------------------------------------------- write
     def write_object(self, name: str, data: bytes) -> Fingerprint:
         """Complete write transaction. Returns the object fingerprint.
-        Thin wrapper over the batched pipeline (a batch of one)."""
+
+        .. deprecated:: use ``DedupClient.put_many`` (``cluster.client()``)
+           — the session facade is the public write surface and owns the
+           write-back/presence caches. This shim delegates to a
+           cache-disabled default session and keeps the legacy
+           message-for-message behavior."""
         return self.write_objects([(name, data)])[0]
 
     def write_objects(self, items: list[tuple[str, bytes]]) -> list[Fingerprint]:
-        """Batched write pipeline. Semantically identical to looping
-        ``write_object`` over ``items`` (same fingerprints, refcounts, OMAP
-        state, rollback behavior and fault event points; on failure the
-        exception propagates after earlier items committed, exactly like the
-        loop) — but vectorized and coalesced where the loop is serial:
+        """Batched write pipeline: semantically identical to looping
+        ``write_object`` (same fingerprints, refcounts, OMAP state,
+        rollback behavior and fault event points) but vectorized, coalesced
+        per target node, and streamed in bounded waves — see
+        ``DedupClient.put_many`` (core/client.py) for the full contract.
 
-        1. chunking (vectorized CDC) + fingerprinting run over the whole
-           batch in one pass (``fingerprint_many``);
-        2. chunk ops for the WHOLE batch are grouped per target node into
-           one ``ChunkOpBatch`` unicast each (cross-object coalescing), so
-           control messages scale with nodes touched, not objects x nodes;
-        3. a batch-local fp->first-writer cache turns chunks repeated
-           *across* objects in the batch into ref-only ops — duplicate
-           bytes never hit the wire.
-
-        ``lookup_unicasts`` counts fingerprint lookups carried (batch-
-        invariant); ``control_msgs`` counts messages, which coalescing
-        reduces; ``net_bytes`` can only shrink (intra-batch duplicates) —
-        for batches that commit; a mid-batch failure has already shipped
-        the tail's bytes, which transport counters do not un-count.
-
-        Transport-policy caveat: the coalesced ChunkOpBatch is emitted by
-        the client-side ingest layer (src="client", like the read path), so
-        node<->node ``partition`` policies do not sever it even though they
-        would sever the serial loop's primary-routed unicasts. To evaluate
-        partitions against the paper's primary-routed write path, set
-        ``coalesce_batches=False``.
-        """
-        prepped: list[tuple[str, bytes, list[bytes]]] = []
-        for name, data in items:
-            prepped.append((name, data, chunk_object(data, self.chunking)))
-        all_fps = fingerprint_many([c for _, _, chunks in prepped for c in chunks])
-        objs: list[tuple[str, bytes, list[bytes], list[Fingerprint]]] = []
-        off = 0
-        for name, data, chunks in prepped:
-            objs.append((name, data, chunks, all_fps[off : off + len(chunks)]))
-            off += len(chunks)
-
-        batched = (
-            self.batch_unicasts
-            if self.batch_unicasts is not None
-            else self.fault_injector is None
-        )
-        if not (batched and self.coalesce_batches and len(objs) > 1):
-            return [
-                self._write_prepared(name, data, chunks, fps, batched)
-                for name, data, chunks, fps in objs
-            ]
-
-        # Cross-object coalescing requires every prev-object check in a wave
-        # to see committed OMAP state, so a batch that rewrites a name it
-        # wrote earlier in the same batch splits into waves at the repeat.
-        out: list[Fingerprint] = []
-        wave: list = []
-        names: set[str] = set()
-        for obj in objs:
-            if obj[0] in names:
-                out.extend(self._write_wave(wave))
-                wave, names = [], set()
-            wave.append(obj)
-            names.add(obj[0])
-        if wave:
-            out.extend(self._write_wave(wave))
-        return out
+        .. deprecated:: use ``DedupClient.put_many`` (``cluster.client()``)
+           — this shim delegates to a cache-disabled default session
+           (presence cache off, unbounded waves), preserving the legacy
+           message shape byte-for-byte."""
+        return self._default_client().put_many(items)
 
     # ---------------------------------------------- coalesced batch write
-    def _write_wave(self, wave: list) -> list[Fingerprint]:
+    def _write_wave(self, wave: list, session=None) -> list[Fingerprint]:
         """One coalesced write wave (unique object names).
 
         Three phases — plan (per object, in order: ingress, idempotence/
@@ -356,6 +433,17 @@ class DedupCluster:
         object, in order: OmapPut; rollback + raise at the first failure,
         releasing the refs of every not-yet-committed object so a retry of
         the tail reproduces the serial outcome).
+
+        ``session`` (a ``DedupClient``) hooks the presence cache in: a
+        plan-time presence hit turns a would-ship-bytes op into a
+        presence-asserted ref-only op (no bytes travel, no CIT probe is
+        booked — ``probe_elisions``); a receiver answering 'miss' for such
+        an op (stale presence: the invalidation was lost or is still in
+        flight) triggers a fallback resend of the actual bytes before the
+        commit phase judges acks, so staleness degrades to the ordinary
+        path instead of failing the write. Acked storing outcomes teach
+        the session's presence cache. ``session=None`` (or a session with
+        the cache disabled) reproduces the legacy behavior exactly.
         """
         plans: list[dict] = []
         # (exc, obj size, counted in writes_failed) — a planning failure is
@@ -405,7 +493,7 @@ class DedupCluster:
                 # previous version intact, exactly like the serial loop that
                 # never reached this item.
 
-            ops: list[tuple[int, Fingerprint, bytes | None, list[str]]] = []
+            ops: list[tuple[int, Fingerprint, bytes | None, list[str], bool]] = []
             failed_chunk: int | None = None
             for i, (fp, chunk) in enumerate(zip(fps, chunks)):
                 live = self._live(self.chunk_targets(fp))
@@ -414,10 +502,21 @@ class DedupCluster:
                     break
                 # Intra-batch dedup: the first writer of a fingerprint ships
                 # bytes; every later op in the wave is ref-only (the bytes
-                # are already on the same placement targets).
+                # are already on the same placement targets). A presence-
+                # cache hit makes even the first writer ref-only — asserted
+                # (presence=True) rather than known, so the receiver
+                # validates and the send phase falls back on 'miss'.
                 payload = None if fp in first_writer else chunk
+                presence = False
+                if (
+                    payload is not None
+                    and session is not None
+                    and session.presence_hit(fp)
+                ):
+                    payload = None
+                    presence = True
                 first_writer.add(fp)
-                ops.append((i, fp, payload, live))
+                ops.append((i, fp, payload, live, presence))
             if failed_chunk is not None:
                 self.stats.writes_failed += 1
                 cause = WriteError(f"chunk {failed_chunk} of {name!r}: no live target")
@@ -430,12 +529,13 @@ class DedupCluster:
                     "kind": "write",
                     "name": name,
                     "data": data,
+                    "chunks": chunks,  # kept resident for presence fallback
                     "fps": fps,
                     "ops": ops,
                     "primary": primary,
                     "txn": txn,
                     "prev": prev,  # non-None only for replaces (done short-circuits)
-                    "acked": {i: [] for i, _, _, _ in ops},
+                    "acked": {i: [] for i, _, _, _, _ in ops},
                 }
             )
 
@@ -446,13 +546,17 @@ class DedupCluster:
             if plan["kind"] != "write":
                 continue
             primary = plan["primary"]
-            for i, fp, payload, live in plan["ops"]:
-                op = ChunkOp(fp, payload, origin=primary)
+            for i, fp, payload, live, presence in plan["ops"]:
+                op = ChunkOp(fp, payload, origin=primary, presence=presence)
                 for t in live:
                     node_ops.setdefault(t, []).append(op)
                     node_refs.setdefault(t, []).append((pi, i))
         batch_txn = self._txn_counter
+        fallback: dict[str, list[tuple[int, int]]] = {}
         for t, ops in node_ops.items():
+            elided = sum(1 for op in ops if op.presence)
+            if elided:
+                self.stats.probe_elisions += elided
             msg = ChunkOpBatch(
                 ops=tuple(ops),
                 txn=batch_txn,
@@ -477,6 +581,43 @@ class DedupCluster:
             for (pi, i), outcome in zip(node_refs[t], outcomes):
                 if outcome != "miss":
                     plans[pi]["acked"][i].append(t)
+                    if session is not None:
+                        session.presence_note(plans[pi]["fps"][i])
+                elif session is not None:
+                    # 'miss' only happens when a presence assertion (this
+                    # op's, or the elided first-writer's earlier in the same
+                    # batch) was stale — queue a byte resend.
+                    fallback.setdefault(t, []).append((pi, i))
+
+        # ---- fallback: stale presence degrades to shipping the bytes ------
+        for t, refs in fallback.items():
+            for pi, i in refs:
+                session.presence_drop(plans[pi]["fps"][i])
+            ops = tuple(
+                ChunkOp(
+                    plans[pi]["fps"][i],
+                    plans[pi]["chunks"][i],
+                    origin=plans[pi]["primary"],
+                )
+                for pi, i in refs
+            )
+            self.stats.presence_fallbacks += len(ops)
+            msg = ChunkOpBatch(
+                ops=ops, txn=batch_txn, fp_first=self.send_fingerprint_first
+            )
+            try:
+                outcomes = self.transport.send("client", t, msg, self.now)
+            except MessageDropped as e:
+                self._cancel_unconfirmed(
+                    "client", t, e, fps=tuple(op.fp for op in ops)
+                )
+                continue
+            except (NodeDown, TransactionAbort):
+                continue
+            for (pi, i), outcome in zip(refs, outcomes):
+                if outcome != "miss":
+                    plans[pi]["acked"][i].append(t)
+                    session.presence_note(plans[pi]["fps"][i])
 
         # ---- commit: per object, in order --------------------------------
         results: list[Fingerprint] = []
@@ -500,7 +641,8 @@ class DedupCluster:
             name, primary = plan["name"], plan["primary"]
             try:
                 bad = next(
-                    (i for i, _, _, _ in plan["ops"] if not plan["acked"][i]), None
+                    (i for i, _, _, _, _ in plan["ops"] if not plan["acked"][i]),
+                    None,
                 )
                 if bad is not None:
                     raise WriteError(f"chunk {bad} of {name!r}: no live target")
@@ -602,7 +744,7 @@ class DedupCluster:
 
     def _rollback_refs(self, src: str, acked: dict, ops) -> None:
         """Release the refcounts one failed wave object took (plan shape)."""
-        self._rollback_acked(src, ((fp, acked[i]) for i, fp, _, _ in ops))
+        self._rollback_acked(src, ((fp, acked[i]) for i, fp, _, _, _ in ops))
 
     def _rollback_acked(self, src: str, pairs) -> None:
         """Release acked (fp, nodes) refs, one DecrefBatch per node.
@@ -912,6 +1054,9 @@ class DedupCluster:
             raise WriteError(f"delete {name!r}: no OMAP replica acked the tombstone")
         self._fault("before_delete_decref", name=name, txn=txn)
         self._release_entry_refs(entry, src=primary)
+        # The recipe's refs are released: cached "exists" evidence for its
+        # chunks may go stale as soon as GC reclaims them — invalidate now.
+        self._invalidate_presence(primary, tuple(entry.chunk_fps), "delete")
         return True
 
     def _release_entry_refs(self, entry: OMAPEntry, src: str) -> None:
@@ -950,6 +1095,8 @@ class DedupCluster:
         self.cmap = new_map
         for n in self.nodes.values():
             n.set_cmap(new_map, self.now)
+        if self._sessions:
+            self._wire_gc_hooks()  # nodes added by the new map
         rebalance(self)
 
     def add_node(self, weight: float = 1.0) -> str:

@@ -110,12 +110,14 @@ class OMAPEntry:
     version: int = 1
     # Delete tombstone: ``deleted=True`` records that this name was deleted
     # by transaction ``version`` at sim time ``deleted_at``. The record has
-    # no recipe (object_fp None, chunk_fps empty — the delete released the
-    # refs) but is replicated, digested, and repaired exactly like a live
-    # entry, so a replica that missed the delete adopts the tombstone
-    # instead of resurrecting the name. ``deleted_at`` travels with the
-    # record unchanged: a late adopter inherits the ORIGINAL deletion time,
-    # so the GC horizon ages cluster-consistently.
+    # no live recipe (object_fp None — the delete released the refs;
+    # ``chunk_fps`` merely RETAINS the released fingerprints for the reap's
+    # presence-invalidation fan-out and is excluded from digest identity
+    # and recipe_refs) but is replicated, digested, and repaired exactly
+    # like a live entry, so a replica that missed the delete adopts the
+    # tombstone instead of resurrecting the name. ``deleted_at`` travels
+    # with the record unchanged: a late adopter inherits the ORIGINAL
+    # deletion time, so the GC horizon ages cluster-consistently.
     deleted: bool = False
     deleted_at: int | None = None
 
@@ -204,25 +206,37 @@ class DMShard:
         entirely still records the delete, guarding against the put's late
         copy). Returns ``(applied, previous_entry)``; the previous LIVE
         entry rides the response into the sender's seen-window so a
-        cancelled delete can restore it."""
+        cancelled delete can restore it.
+
+        The tombstone RETAINS the replaced recipe's chunk fingerprints
+        (``chunk_fps``; carried forward from a previous tombstone on
+        re-delete). They are not part of the digest identity and
+        ``recipe_refs`` still skips tombstones — the recipe is released —
+        but the reap can then return them, giving presence caches a
+        last-chance invalidation for deletes whose original fan-out was
+        lost (e.g. across a partition)."""
         prev = self.omap.get(name)
         if prev is not None and prev.version > version:
             return False, None
+        retained = list(prev.chunk_fps) if prev is not None else []
         self.omap[name] = OMAPEntry(
-            name, None, [], 0, version, deleted=True, deleted_at=now
+            name, None, retained, 0, version, deleted=True, deleted_at=now
         )
         return True, prev
 
-    def omap_reap(self, name: str, version: int) -> bool:
+    def omap_reap(self, name: str, version: int) -> OMAPEntry | None:
         """GC-horizon reap: remove the tombstone record iff the held entry
         is a tombstone at exactly ``version`` (a newer write or delete is
         untouched). Idempotent — the coordinator only sends this once every
-        live placement target proved it holds the aged tombstone."""
+        live placement target proved it holds the aged tombstone. Returns
+        the reaped record (its retained ``chunk_fps`` ride the response,
+        feeding the coordinator's presence-invalidation fan-out) or None
+        when nothing was reaped."""
         cur = self.omap.get(name)
         if cur is None or not cur.deleted or cur.version != version:
-            return False
+            return None
         del self.omap[name]
-        return True
+        return cur
 
     def aged_tombstones(self, now: int, horizon: int) -> dict[str, tuple[int, int]]:
         """Tombstones past the GC horizon (name -> (version, deleted_at)) —

@@ -24,6 +24,7 @@ aging threshold.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Callable
 
 from repro.core.dmshard import DMShard, INVALID, VALID
 from repro.core.fingerprint import Fingerprint
@@ -46,6 +47,13 @@ class GarbageCollector:
     spared: int = 0
     repaired: int = 0
     audit_fed: int = 0             # entries fed pre-aged by a refcount audit
+    # Reclaim hook: called with the fingerprints a run physically removed.
+    # The cluster wires this (only while presence-caching client sessions
+    # are registered) to queue PresenceInvalidate fan-outs — a reclaimed
+    # chunk is the one event that turns cached "exists" evidence into a
+    # would-be dangling reference, so it must reach the caches. Unset (the
+    # default) costs nothing and changes nothing.
+    on_reclaim: Callable[[list[Fingerprint]], None] | None = None
 
     def scan(self, shard: DMShard, now: int) -> None:
         """Phase 1: collect currently-invalid fingerprints into the held set."""
@@ -107,4 +115,7 @@ class GarbageCollector:
 
     def run(self, shard: DMShard, chunk_store: dict[Fingerprint, bytes], now: int) -> list[Fingerprint]:
         self.scan(shard, now)
-        return self.sweep(shard, chunk_store, now)
+        removed = self.sweep(shard, chunk_store, now)
+        if removed and self.on_reclaim is not None:
+            self.on_reclaim(removed)
+        return removed

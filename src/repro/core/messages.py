@@ -44,6 +44,7 @@ DIGEST_ENTRY_BYTES = 56   # per-fp detail record: fp + (has_bytes, refcount, fla
 RECIPE_REF_BYTES = 40     # per (chunk_fp, count) recipe-reference pair (audit)
 OMAP_DIGEST_ENTRY_BYTES = 64  # per-name detail record: name hash + object fp + version + tombstone marker
 TOMBSTONE_RECORD_BYTES = 24   # per aged-tombstone candidate: name hash + version + age
+PRESENCE_FP_BYTES = 32        # per fingerprint in a presence-cache invalidation fan-out
 
 
 class Message:
@@ -80,11 +81,20 @@ class ChunkOp:
     asks only for a refcount increment — nothing but the fingerprint travels.
     ``origin`` is the OSS that produced the op (the object's primary): ops
     delivered to their own origin cost no network payload.
+
+    ``presence=True`` marks a ref-only op asserted from a client presence
+    cache: the sender holds positive (possibly stale) evidence the chunk
+    already exists cluster-wide, so the op is a blind incref *record*
+    rather than a fingerprint *query* — it is excluded from ``lookups()``
+    (the probe-elision win). The receiver still validates locally and
+    answers 'miss' when the evidence was stale; the sender then falls back
+    to shipping the bytes, so stale presence degrades, never dangles.
     """
 
     fp: Fingerprint
     data: bytes | None = None
     origin: str = "client"
+    presence: bool = False
 
 
 @dataclass(frozen=True)
@@ -112,7 +122,7 @@ class ChunkOpBatch(Message):
         return total
 
     def lookups(self) -> int:
-        return len(self.ops)
+        return sum(1 for op in self.ops if not op.presence)
 
 
 @dataclass(frozen=True)
@@ -161,11 +171,19 @@ class TombstoneReap(Message):
     Sent only once the recovery round has proof the tombstone is FULLY
     ACKED (every live placement target listed it as aged past the GC
     horizon), so no stale live replica can remain that the tombstone still
-    needs to beat. Control-only on the wire."""
+    needs to beat. Control-only on the request wire; a successful reap's
+    response carries the tombstone's retained chunk fingerprints (the
+    deleted recipe, ``PRESENCE_FP_BYTES`` each) so the coordinator can fan
+    out a last-chance ``PresenceInvalidate``."""
 
     TYPE = "tombstone_reap"
     name: str = ""
     version: int = 0
+
+    def response_payload_bytes(self, response: object) -> int:
+        if isinstance(response, tuple) and len(response) == 2:
+            return PRESENCE_FP_BYTES * len(response[1])
+        return 0
 
 
 @dataclass(frozen=True)
@@ -380,6 +398,29 @@ class TxnCancel(Message):
 
 
 @dataclass(frozen=True)
+class PresenceInvalidate(Message):
+    """Presence-cache invalidation fan-out (node/coordinator -> client
+    session): the listed fingerprints may no longer exist cluster-wide, so
+    any cached "exists" evidence for them must be dropped. Emitted on
+    delete (the recipe's refs were released), on GC reclaim (the aged
+    sweep physically removed chunks), and on tombstone reap (last-chance
+    re-invalidation riding the reap proof). Delivery is best-effort on
+    purpose: the handler is idempotent (dropping an fp twice is a no-op)
+    and a LOST invalidation only leaves stale presence, which the
+    receiver-side validation of presence-asserted ops already degrades to
+    a fallback byte resend — correctness never rests on this message
+    arriving. ``reason`` is one of 'delete'|'gc'|'reap' (stats only).
+    Costs ``PRESENCE_FP_BYTES`` per fingerprint on the wire."""
+
+    TYPE = "presence_invalidate"
+    fps: tuple[Fingerprint, ...] = ()
+    reason: str = "delete"
+
+    def payload_bytes(self, dst: str, response=None) -> int:
+        return PRESENCE_FP_BYTES * len(self.fps)
+
+
+@dataclass(frozen=True)
 class RawPut(Message):
     """Baseline-only store: raw bytes placed under a fingerprint with no
     CIT transaction (central-dedup data push, no-dedup object store)."""
@@ -407,5 +448,6 @@ MESSAGE_TYPES = (
     RepairChunk,
     RefAudit,
     TxnCancel,
+    PresenceInvalidate,
     RawPut,
 )

@@ -246,10 +246,13 @@ class StorageNode:
             return prev
         if isinstance(msg, TombstoneReap):
             reaped = self.shard.omap_reap(msg.name, msg.version)
-            if reaped:
+            if reaped is not None:
                 self.stats.tombstones_reaped += 1
                 self._mark_name_dirty(msg.name, now)
-            return "reaped" if reaped else "noop"
+                # The retained fps ride the response: the coordinator fans
+                # them out as a last-chance presence invalidation.
+                return ("reaped", tuple(reaped.chunk_fps))
+            return "noop"
         if isinstance(msg, DecrefBatch):
             self.decref_chunks(list(msg.fps), now, audit=msg.audit)
             return True

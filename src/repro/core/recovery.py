@@ -529,7 +529,13 @@ class RecoveryRound:
         live entry, or holding a different version) keeps the tombstone
         for the next round; repair converges the replicas first. The reap
         itself is version-conditional at the receiver, so a recreate that
-        lands between proof and reap survives."""
+        lands between proof and reap survives.
+
+        A successful reap's response carries the tombstone's retained
+        chunk fingerprints (the deleted recipe); the coordinator fans them
+        out as ``PresenceInvalidate`` to registered client sessions — the
+        last-chance invalidation for a delete whose original fan-out was
+        lost (e.g. the session was partitioned away when the delete ran)."""
         c = self.cluster
         if not self._tombstones_collected:
             self._collect_summaries("omap")
@@ -538,6 +544,7 @@ class RecoveryRound:
             for name, (version, _at) in tombs.items():
                 candidates.setdefault(name, {})[nid] = version
         reaped = 0
+        reap_fps: set = set()
         for name in sorted(candidates):
             listers = candidates[name]
             if len(set(listers.values())) != 1:
@@ -551,8 +558,12 @@ class RecoveryRound:
             for t in sorted(listers):
                 if not c.nodes[t].alive:
                     continue
-                if self._send(self.src, t, TombstoneReap(name, version)) == "reaped":
+                resp = self._send(self.src, t, TombstoneReap(name, version))
+                if isinstance(resp, tuple) and resp[0] == "reaped":
                     reaped += 1
+                    reap_fps.update(resp[1])
+        if reap_fps:
+            c._invalidate_presence(self.src, tuple(sorted(reap_fps)), "reap")
         self.report.tombstones_reaped += reaped
         return reaped
 

@@ -398,6 +398,11 @@ class Transport:
     """
 
     handlers: Mapping[str, object] = field(default_factory=dict)
+    # Non-node participants (client sessions with a presence cache) register
+    # here under their session id; consulted only when ``handlers`` has no
+    # entry for the destination, so node ids always win and an empty dict
+    # keeps the legacy single-map behavior byte-identical.
+    extra_handlers: dict[str, object] = field(default_factory=dict)
     policy: DeliveryPolicy = field(default_factory=reliable)
     retry_budget: int = 0
     ack_timeout: int = 2
@@ -514,7 +519,9 @@ class Transport:
     def _deliver(self, env: Envelope, msg: Message, recv_time: int):
         """One attempt reaching the receiver: dispatch + wire accounting
         for the request payload and the ack flowing back."""
-        handler = self.handlers[env.dst]
+        handler = self.handlers.get(env.dst)
+        if handler is None:
+            handler = self.extra_handlers[env.dst]
         response = handler.handle(msg, recv_time, env)
         self.deliveries += 1
         edge = self.edge(env.src, env.dst)

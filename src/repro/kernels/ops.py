@@ -326,9 +326,10 @@ def _cut_and_fp_impl(
 def cdc_cut_and_fingerprint_many(
     streams: list[jnp.ndarray],
     *,
-    mask: int,
-    min_size: int,
-    max_size: int,
+    mask: int | None = None,
+    min_size: int | None = None,
+    max_size: int | None = None,
+    spec=None,
     use_pallas: bool | None = None,
     interpret: bool = False,
     block_len: int | None = None,
@@ -337,7 +338,9 @@ def cdc_cut_and_fingerprint_many(
 
     streams: list of (n_i,) uint8 arrays (one per tensor/object). Boundaries
     are bit-identical to ``chunk_cdc_scalar`` with the same mask/min/max;
-    fingerprints follow the ``fp_row_words`` row contract.
+    fingerprints follow the ``fp_row_words`` row contract. Pass either a
+    ``core.chunking.ChunkSpec`` via ``spec=`` (the consolidated surface) or
+    the raw mask/min_size/max_size trio (legacy spelling, kept mapped).
 
     Returns, per stream: (cut_positions (M,) i32 — first ``n_cuts`` valid,
     n_cuts i32 scalar, fps (R, 4) u32 — first ``n_chunks`` rows valid,
@@ -345,6 +348,7 @@ def cdc_cut_and_fingerprint_many(
     Exactly one CDC launch + one fingerprint launch per call, regardless of
     wave size (empty streams short-circuit without a launch).
     """
+    mask, min_size, max_size = _resolve_chunk_args(spec, mask, min_size, max_size)
     if use_pallas is None:
         use_pallas = _on_tpu()
     if block_len is None:
@@ -371,25 +375,50 @@ def cdc_cut_and_fingerprint_many(
 
 
 def cdc_cut_and_fingerprint(
-    stream: jnp.ndarray, *, mask: int, min_size: int, max_size: int, **kw
+    stream: jnp.ndarray,
+    *,
+    mask: int | None = None,
+    min_size: int | None = None,
+    max_size: int | None = None,
+    spec=None,
+    **kw,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Single-stream ``cdc_cut_and_fingerprint_many``."""
     return cdc_cut_and_fingerprint_many(
-        [stream], mask=mask, min_size=min_size, max_size=max_size, **kw
+        [stream], mask=mask, min_size=min_size, max_size=max_size, spec=spec, **kw
     )[0]
+
+
+def _resolve_chunk_args(
+    spec, mask: int | None, min_size: int | None, max_size: int | None
+) -> tuple[int, int, int]:
+    """Map the consolidated ``ChunkSpec`` spelling onto the kernels' raw
+    mask/min/max trio; explicit raw kwargs win over the spec (legacy call
+    sites pass only the trio, new ones only ``spec``)."""
+    if spec is not None:
+        kw = spec.kernel_kwargs()
+        mask = kw["mask"] if mask is None else mask
+        min_size = kw["min_size"] if min_size is None else min_size
+        max_size = kw["max_size"] if max_size is None else max_size
+    if mask is None or min_size is None or max_size is None:
+        raise TypeError("pass spec= or all of mask/min_size/max_size")
+    return mask, min_size, max_size
 
 
 def cdc_cut_offsets(
     data_u8: jnp.ndarray,
     *,
-    mask: int,
-    min_size: int,
-    max_size: int,
+    mask: int | None = None,
+    min_size: int | None = None,
+    max_size: int | None = None,
+    spec=None,
     use_pallas: bool | None = None,
     interpret: bool = False,
 ) -> np.ndarray:
     """Device cut selection -> host int64 cut positions (inclusive chunk
-    ends, tail excluded) — the device twin of ``chunking._cdc_cuts``."""
+    ends, tail excluded) — the device twin of ``chunking._cdc_cuts``.
+    Accepts ``spec=`` (a ``core.chunking.ChunkSpec``) or the raw trio."""
+    mask, min_size, max_size = _resolve_chunk_args(spec, mask, min_size, max_size)
     if use_pallas is None:
         use_pallas = _on_tpu()
     n = int(data_u8.shape[0])

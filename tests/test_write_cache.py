@@ -1,0 +1,509 @@
+"""Write-back chunk cache + fingerprint presence cache (DedupClient).
+
+The safety property under test throughout: presence is an optimization
+hint, never an authority. Whatever happens to the invalidation traffic —
+dropped, duplicated, reordered, or never sent — a presence-enabled
+session must end byte-identical to a cache-disabled oracle, with exact
+refcounts; staleness may only cost fallback byte resends.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (
+    ChunkSpec,
+    ChunkingSpec,
+    DedupCluster,
+    PresenceCache,
+    PresenceInvalidate,
+    chaos,
+    chunk_object,
+    drop,
+    duplicate,
+    fingerprint_many,
+    reorder,
+)
+
+CH = ChunkingSpec("fixed", 1024)
+
+
+def mk(n=4, **kw):
+    return DedupCluster.create(n, chunking=CH, **kw)
+
+
+def workload(seed=7, n_items=24, obj_bytes=4096, pool=8):
+    """~50% duplicate chunks: each object concatenates two pool blocks."""
+    rng = random.Random(seed)
+    blocks = [rng.randbytes(obj_bytes // 2) for _ in range(pool)]
+    return [
+        (f"o{i}", blocks[i % pool] + blocks[(i + 1) % pool])
+        for i in range(n_items)
+    ]
+
+
+def node_state(c):
+    """Full logical state per node: live OMAP recipes, CIT refcounts,
+    chunk-store bytes — the byte-identical comparison surface."""
+    out = {}
+    for nid, n in sorted(c.nodes.items()):
+        omap = {
+            name: (e.object_fp, tuple(e.chunk_fps), e.version)
+            for name, e in n.shard.omap.items()
+            if not e.deleted
+        }
+        cit = {
+            fp: (e.refcount, e.flag, e.size)
+            for fp, e in n.shard.cit.items()
+        }
+        out[nid] = (omap, cit, dict(n.chunk_store))
+    return out
+
+
+def assert_refs_exact(c):
+    """No dangling or leaked refs: every node's CIT refcounts equal the
+    recipe references across all live OMAP entries cluster-wide."""
+    expected = {}
+    for n in c.nodes.values():
+        for e in n.shard.omap.values():
+            if e.deleted:
+                continue
+            for fp in e.chunk_fps:
+                expected[fp] = expected.get(fp, 0) + 1
+    for nid, n in c.nodes.items():
+        for fp, e in n.shard.cit.items():
+            assert e.refcount == expected.get(fp, 0), (
+                f"{nid}: {fp} refcount {e.refcount} != expected "
+                f"{expected.get(fp, 0)}"
+            )
+            assert fp in n.chunk_store, f"{nid}: {fp} entry without bytes"
+
+
+# --------------------------------------------------------------- PresenceCache
+
+
+def fps_of(data):
+    return fingerprint_many(chunk_object(data, CH))
+
+
+def test_presence_cache_lru_and_counters():
+    p = PresenceCache(2)
+    a, b, c = fps_of(random.Random(1).randbytes(3 * 1024))[:3]
+    assert not p.hit(a) and p.misses == 1
+    p.note(a)
+    p.note(b)
+    assert p.hit(a) and p.hits == 1          # a is MRU now
+    p.note(c)                                # evicts b (LRU)
+    assert len(p) == 2 and p.evictions == 1
+    assert not p.hit(b)
+    assert p.hit(a) and p.hit(c)
+
+
+def test_presence_cache_invalidate_idempotent():
+    p = PresenceCache(8)
+    fps = fps_of(random.Random(2).randbytes(3 * 1024))
+    for fp in fps:
+        p.note(fp)
+    assert p.invalidate_many(fps) == len(fps)
+    assert p.invalidate_many(fps) == 0        # second pass is a no-op
+    assert len(p) == 0 and p.invalidations == len(fps)
+
+
+def test_presence_cache_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError):
+        PresenceCache(0)
+
+
+# ------------------------------------------------------------------ ChunkSpec
+
+
+def test_chunkspec_core_convention_matches_chunkingspec():
+    legacy = ChunkingSpec("cdc", 8192).normalized()
+    spec = ChunkSpec.cdc(8192)
+    assert (spec.min_bytes, spec.max_bytes) == (legacy.min_size, legacy.max_size)
+    assert spec.to_chunking() == legacy
+    data = random.Random(3).randbytes(100_000)
+    assert chunk_object(data, spec) == chunk_object(data, legacy)
+
+
+def test_chunkspec_checkpoint_convention():
+    spec = ChunkSpec.for_checkpoint(512 * 1024)
+    assert spec.kind == "cdc" and spec.device
+    assert spec.min_bytes == 512 * 1024 // 2
+    assert spec.max_bytes == 512 * 1024 * 2
+    # legacy device_cdc=False mapped to fixed-size chunking
+    fixed = ChunkSpec.for_checkpoint(4096, device=False)
+    assert fixed.kind == "fixed" and fixed.target_bytes == 4096
+
+
+def test_chunkspec_kernel_kwargs_roundtrip():
+    from repro.core.chunking import cdc_mask
+
+    spec = ChunkSpec.cdc(8192, min_bytes=1000, max_bytes=20000)
+    kw = spec.kernel_kwargs()
+    assert kw == {"mask": cdc_mask(8192), "min_size": 1000, "max_size": 20000}
+    assert ChunkSpec.from_chunking(spec.to_chunking()) == spec
+
+
+def test_kernel_entry_points_accept_spec():
+    import numpy as np
+
+    from repro.kernels import ops as kops
+
+    data = np.frombuffer(random.Random(5).randbytes(50_000), dtype=np.uint8)
+    spec = ChunkSpec.cdc(4096)
+    via_spec = kops.cdc_cut_offsets(data, spec=spec)
+    via_raw = kops.cdc_cut_offsets(data, **spec.kernel_kwargs())
+    assert list(via_spec) == list(via_raw)
+    with pytest.raises(TypeError):
+        kops.cdc_cut_offsets(data)            # neither spelling given
+
+
+# ----------------------------------------------------------- stats snapshot
+
+
+def test_stats_snapshot_deterministic_and_complete():
+    items = workload()
+    c1, c2 = mk(), mk()
+    c1.write_objects(items)
+    c2.write_objects(items)
+    s1, s2 = c1.stats.snapshot(), c2.stats.snapshot()
+    assert s1 == s2
+    for col in (
+        "lookup_unicasts",
+        "control_msgs",
+        "net_bytes",
+        "probe_elisions",
+        "cache_hits",
+        "cache_evictions",
+        "presence_fallbacks",
+        "peak_dirty_bytes",
+    ):
+        assert col in s1
+
+
+# ------------------------------------------------------------ client facade
+
+
+def test_put_is_write_back_until_flush():
+    c = mk()
+    s = c.client()
+    s.put("a", b"x" * 4096)
+    assert c.stats.writes_ok == 0, "put must buffer, not write"
+    with pytest.raises(Exception):
+        c.read_object("a")
+    fps = s.flush()
+    assert set(fps) == {"a"}
+    assert c.read_object("a") == b"x" * 4096
+    assert s.get("a") == b"x" * 4096
+
+
+def test_put_auto_flushes_at_wave_bytes():
+    c = mk()
+    s = c.client(wave_bytes=8 * 1024)
+    for i in range(4):
+        s.put(f"a{i}", b"y" * 4096)
+    assert c.stats.writes_ok >= 2, "buffer must auto-flush at the bound"
+    s.close()
+    assert c.stats.writes_ok == 4
+
+
+def test_get_and_delete_drain_pending():
+    c = mk()
+    s = c.client()
+    s.put("a", b"z" * 2048)
+    assert s.get("a") == b"z" * 2048          # read-your-writes
+    s.put("b", b"w" * 2048)
+    assert s.delete("b") or True              # drained then deleted
+    assert c.stats.writes_ok == 2
+
+
+def test_closed_session_rejects_use():
+    c = mk()
+    s = c.client()
+    s.close()
+    s.close()                                  # idempotent
+    with pytest.raises(RuntimeError):
+        s.put("a", b"x")
+
+
+def test_shim_parity_with_client_session():
+    """write_objects (the deprecated shim) and a cache-disabled client must
+    produce identical state AND identical message accounting."""
+    items = workload()
+    c1, c2 = mk(), mk()
+    c1.write_objects(items)
+    s = c2.client()
+    s.put_many(items)
+    assert c1.stats.snapshot() == c2.stats.snapshot()
+    assert node_state(c1) == node_state(c2)
+
+
+# ------------------------------------------------------- presence elision
+
+
+def test_presence_elides_probes_and_matches_oracle():
+    """Bounded waves + presence: chunks repeated across waves are elided
+    (a single unbounded wave's intra-wave repeats are already ref-only via
+    the first-writer set, so presence only matters across waves)."""
+    items = workload()
+    oracle, cached = mk(), mk()
+    fps1 = oracle.write_objects(items)
+    s = cached.client(presence_cache=256, wave_bytes=16 * 1024)
+    fps2 = s.put_many(items)
+    assert fps1 == fps2
+    assert node_state(oracle) == node_state(cached)
+    assert cached.stats.probe_elisions > 0
+    assert cached.stats.lookup_unicasts < oracle.stats.lookup_unicasts
+    assert (
+        cached.stats.lookup_unicasts + cached.stats.probe_elisions
+        == oracle.stats.lookup_unicasts
+    ), "every elision must account for exactly one skipped probe"
+    assert_refs_exact(cached)
+
+
+def test_presence_elision_is_deterministic():
+    items = workload()
+    runs = []
+    for _ in range(2):
+        c = mk()
+        s = c.client(presence_cache=256, wave_bytes=16 * 1024)
+        s.put_many(items)
+        runs.append(c.stats.snapshot())
+    assert runs[0] == runs[1]
+    assert runs[0]["probe_elisions"] > 0
+
+
+def test_presence_helps_across_batches():
+    """The cross-batch case the wave-local first-writer set cannot cover:
+    batch 2 rewrites batch 1's content under new names."""
+    items = workload(n_items=12)
+    c = mk()
+    s = c.client(presence_cache=256)
+    s.put_many(items)
+    before = c.stats.probe_elisions
+    s.put_many([(f"n{i}", data) for i, (_, data) in enumerate(items)])
+    assert c.stats.probe_elisions > before
+    oracle = mk()
+    oracle.write_objects(items)
+    oracle.write_objects([(f"n{i}", d) for i, (_, d) in enumerate(items)])
+    assert node_state(oracle) == node_state(c)
+    assert_refs_exact(c)
+
+
+def test_presence_eviction_bounds_capacity():
+    items = workload(n_items=16)
+    c = mk()
+    s = c.client(presence_cache=4)
+    s.put_many(items)
+    assert len(s.presence) <= 4
+    assert c.stats.cache_evictions > 0
+    oracle = mk()
+    oracle.write_objects(items)
+    assert node_state(oracle) == node_state(c)
+
+
+# ------------------------------------------------------------ invalidation
+
+
+def test_delete_invalidates_presence():
+    items = workload(n_items=8)
+    c = mk()
+    s = c.client(presence_cache=256)
+    s.put_many(items)
+    assert len(s.presence) > 0
+    c.delete_object("o0")
+    assert s.invalidations_received >= 1
+    assert c.stats.cache_invalidations > 0
+    # re-writing the deleted content stays correct
+    s.put_many([("o0", items[0][1])])
+    assert c.read_object("o0") == items[0][1]
+    assert_refs_exact(c)
+
+
+def test_gc_reclaim_invalidates_presence():
+    c = mk()
+    s = c.client(presence_cache=256)
+    data = random.Random(11).randbytes(4096)
+    s.put_many([("a", data)])
+    assert len(s.presence) > 0
+    c.delete_object("a")
+    after_delete = s.invalidations_received
+    threshold = max(n.gc.threshold for n in c.nodes.values())
+    c.run_gc()                       # scan: held set observes the invalids
+    c.tick(threshold + 1)            # age past the threshold
+    removed = c.run_gc()             # sweep: physically reclaim
+    assert sum(len(v) for v in removed.values()) > 0, "GC must reclaim"
+    assert s.invalidations_received > after_delete, (
+        "GC reclaim must fan out its own invalidation"
+    )
+    # the chunks are physically gone; a presence-hit write must still work
+    s.put_many([("b", data)])
+    assert c.read_object("b") == data
+    assert_refs_exact(c)
+
+
+def test_tombstone_reap_invalidates_presence():
+    """The last-chance path: the session misses the delete-time fan-out
+    (drop only=PresenceInvalidate during the delete), and learns via the
+    reap's retained-fps response instead."""
+    from repro.core import reliable
+
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    s = c.client(presence_cache=256)
+    data = random.Random(13).randbytes(4096)
+    s.put_many([("x", data)])
+    c.tick(2)
+    c.transport.policy = drop(1.0, only=(PresenceInvalidate,))
+    assert c.delete_object("x")
+    assert s.invalidations_received == 0, "delete-time fan-out was dropped"
+    c.transport.policy = reliable()
+    horizon = max(n.gc.tombstone_horizon for n in c.nodes.values())
+    c.tick(horizon + 1)
+    rep = c.recover()
+    assert rep.tombstones_reaped > 0
+    assert s.invalidations_received >= 1, (
+        "reap must fan out the tombstone's retained fps"
+    )
+
+
+# ------------------------------------------------- staleness under chaos
+
+
+def test_stale_presence_falls_back_to_byte_resend():
+    """Invalidations all lost + chunks GC'd: the next presence hit is a
+    receiver-side miss; the writer must resend bytes and converge to the
+    oracle — stale presence costs traffic, never correctness."""
+    c = mk()
+    s = c.client(presence_cache=256)
+    data = random.Random(17).randbytes(8192)
+    s.put_many([("a", data)])
+    c.transport.policy = drop(1.0, only=(PresenceInvalidate,))
+    c.delete_object("a")
+    threshold = max(n.gc.threshold for n in c.nodes.values())
+    c.run_gc()                       # scan
+    c.tick(threshold + 1)            # age
+    removed = c.run_gc()             # reclaim (invalidation fan-out dropped)
+    assert sum(len(v) for v in removed.values()) > 0, "GC must reclaim"
+    assert s.invalidations_received == 0 and len(s.presence) > 0, (
+        "precondition: the cache is stale"
+    )
+    # use a second name alongside, so the coalesced wave path runs
+    s.put_many([("b", data), ("c", random.Random(18).randbytes(4096))])
+    assert c.stats.presence_fallbacks > 0, "stale hits must fall back"
+    assert c.read_object("b") == data
+    oracle = mk()
+    oracle.write_object("a", data)
+    oracle.delete_object("a")
+    oracle.run_gc()
+    oracle.tick(threshold + 1)
+    oracle.run_gc()
+    oracle.write_objects([("b", data), ("c", random.Random(18).randbytes(4096))])
+    c.tick(2)       # drain async commit-flag flips on both sides
+    oracle.tick(2)
+    assert node_state(oracle) == node_state(c)
+    assert_refs_exact(c)
+
+
+def test_invalidation_handler_idempotent_under_duplicate_and_reorder():
+    items = workload(n_items=10)
+    for policy in (
+        duplicate(1.0, only=(PresenceInvalidate,)),
+        reorder(0.5, seed=3, only=(PresenceInvalidate,)),
+    ):
+        c = mk()
+        s = c.client(presence_cache=256)
+        s.put_many(items)
+        c.transport.policy = policy
+        for name, _ in items[:4]:
+            c.delete_object(name)
+        c.tick(4)  # land held/duplicated copies
+        oracle = mk()
+        oracle.write_objects(items)
+        for name, _ in items[:4]:
+            oracle.delete_object(name)
+        oracle.tick(4)
+        assert node_state(oracle) == node_state(c)
+        assert_refs_exact(c)
+
+
+def test_chaos_with_presence_matches_oracle():
+    """Full chaos on the invalidation traffic only; writes stay reliable so
+    the comparison is exact. State must equal the cache-disabled oracle."""
+    items = workload(n_items=20)
+    c = mk()
+    s = c.client(presence_cache=256)
+    c.transport.policy = chaos(seed=5, only=(PresenceInvalidate,))
+    s.put_many(items)
+    for name, _ in items[:6]:
+        c.delete_object(name)
+    s.put_many([(f"r{i}", d) for i, (_, d) in enumerate(items[:6])])
+    c.tick(6)
+    oracle = mk()
+    oracle.write_objects(items)
+    for name, _ in items[:6]:
+        oracle.delete_object(name)
+    oracle.write_objects([(f"r{i}", d) for i, (_, d) in enumerate(items[:6])])
+    oracle.tick(6)
+    assert node_state(oracle) == node_state(c)
+    assert_refs_exact(c)
+
+
+# --------------------------------------------------------- bounded memory
+
+
+def test_streaming_waves_bound_peak_dirty_bytes():
+    items = workload(n_items=32, obj_bytes=4096)
+    wave = 8 * 1024
+    c = mk()
+    s = c.client(wave_bytes=wave)
+    fps = s.put_many(items)
+    assert len(fps) == len(items)
+    assert s.wcache.waves_emitted > 1, "the batch must split into waves"
+    max_obj = max(len(d) for _, d in items)
+    assert c.stats.peak_dirty_bytes <= wave + max_obj, (
+        f"peak dirty {c.stats.peak_dirty_bytes} exceeds wave bound {wave} "
+        f"+ one-object slack {max_obj}"
+    )
+    oracle = mk()
+    oracle.write_objects(items)
+    assert node_state(oracle) == node_state(c)
+    # the unbounded legacy shape materializes the whole batch
+    assert oracle.stats.peak_dirty_bytes >= sum(len(d) for _, d in items)
+
+
+def test_wave_splits_at_repeated_name():
+    c = mk()
+    s = c.client()
+    data1, data2 = b"1" * 2048, b"2" * 2048
+    s.put_many([("a", data1), ("b", data1), ("a", data2)])
+    assert c.read_object("a") == data2, "last write wins across waves"
+    assert s.wcache.waves_emitted == 2
+
+
+# ------------------------------------------------------ checkpoint session
+
+
+def test_checkpoint_streams_waves_and_keeps_state():
+    jax = pytest.importorskip("jax")
+    import numpy as np
+
+    from repro.checkpoint.dedup_ckpt import CheckpointConfig, DedupCheckpointer
+
+    tree = {
+        f"layer{i}": np.arange(4096, dtype=np.float32) + i for i in range(6)
+    }
+    c1 = DedupCluster.create(4, chunking=CH)
+    ck1 = DedupCheckpointer(
+        c1, CheckpointConfig(device_fp_fastpath=False, wave_bytes=32 * 1024)
+    )
+    ck1.save("step1", tree)
+    c2 = DedupCluster.create(4, chunking=CH)
+    ck2 = DedupCheckpointer(c2, CheckpointConfig(device_fp_fastpath=False))
+    ck2.save("step1", tree)
+    got = ck1.restore("step1")
+    for k in tree:
+        assert np.array_equal(np.asarray(got[f"['{k}']"] if f"['{k}']" in got else got[k]), tree[k])
+    assert ck1.session is not None and ck1.session.wcache.waves_emitted > 1
+    assert c1.stats.peak_dirty_bytes < c2.stats.peak_dirty_bytes
+    assert node_state(c1) == node_state(c2)
