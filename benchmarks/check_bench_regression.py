@@ -74,6 +74,33 @@ DETERMINISTIC_COLUMNS = [
     ("write_cache", "presence_fallbacks"),
     ("write_cache", "peak_dirty_bytes_cache_on"),
     ("write_cache", "wave_bytes"),
+    # coalesced batch restore vs the serial read oracle on the same
+    # two-batch 50%-dup workload: message / byte / elision counts and the
+    # per-object fragmentation aggregates are exact functions of the
+    # seeded workload and the wire model — drift means the batch planner,
+    # the first-reader cache, or the read accounting changed. In
+    # particular read_payload_batched is pinned to the batch's DISTINCT
+    # chunk bytes (each duplicate travels once) and fetch_elisions > 0 is
+    # asserted inside the bench itself. Only the *_objects_s wall-clock
+    # columns are noise (not listed here).
+    ("read_path", "n_objects"),
+    ("read_path", "obj_kib"),
+    ("read_path", "read_msgs_serial"),
+    ("read_path", "read_msgs_batched"),
+    ("read_path", "msg_reduction"),
+    ("read_path", "read_net_bytes_serial"),
+    ("read_path", "read_net_bytes_batched"),
+    ("read_path", "read_payload_serial"),
+    ("read_path", "read_payload_batched"),
+    ("read_path", "read_batches"),
+    ("read_path", "read_fallback_rounds"),
+    ("read_path", "fetch_elisions"),
+    ("read_path", "frag_chunks_total"),
+    ("read_path", "frag_nodes_touched_total"),
+    ("read_path", "frag_nodes_touched_max"),
+    ("read_path", "frag_spread_max"),
+    ("read_path", "modeled_time_per_edge_serial_s"),
+    ("read_path", "modeled_time_per_edge_batched_s"),
     # recovery round (split-brain heal): message/byte counts and both
     # modeled-time link models are exact functions of the seeded schedule;
     # only recovery_wall_s is noise (and is not listed here)

@@ -242,10 +242,15 @@ class DedupCheckpointer:
     def restore(self, name: str, like: Any | None = None) -> Any:
         mbytes = self.cluster.read_object(f"{self.cfg.prefix}/{name}/MANIFEST")
         manifest = json.loads(mbytes.decode())
-        leaves = {}
-        for ent in manifest["leaves"]:
-            data = self.cluster.read_object(ent["object"])
-            leaves[ent["key"]] = _deserialize_leaf(data)
+        # One coalesced restore for every leaf: leaves sharing chunks (the
+        # dedup win this checkpointer exists for) are fetched once per
+        # batch, and each node serves its chunks in one ChunkReadBatch.
+        ents = manifest["leaves"]
+        blobs = self.cluster.read_objects([ent["object"] for ent in ents])
+        leaves = {
+            ent["key"]: _deserialize_leaf(data)
+            for ent, data in zip(ents, blobs)
+        }
         if like is None:
             return leaves
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)

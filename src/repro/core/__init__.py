@@ -3,9 +3,10 @@
 Public API:
     DedupCluster.create(n_nodes, replicas=..., chunking=...)
     cluster.client(presence_cache=..., wave_bytes=...) -> DedupClient
-    client.put / put_many / get / delete / flush / close
+    client.put / put_many / get / get_many / delete / flush / close
     cluster.write_object / write_objects  (deprecated shims over a default
-        cache-disabled client session) / read_object / delete_object
+        cache-disabled client session) / read_object / read_objects /
+        delete_object
     cluster.add_node / remove_node / scrub / run_gc / tick
     ClusterMap, ChunkSpec, ChunkingSpec, Fingerprint, fingerprint_many
 """
@@ -42,6 +43,8 @@ from repro.core.messages import (
     ChunkOp,
     ChunkOpBatch,
     ChunkRead,
+    ChunkReadBatch,
+    ChunkReadBatchReply,
     DecrefBatch,
     DigestReply,
     DigestRequest,
@@ -134,6 +137,8 @@ __all__ = [
     "ChunkOp",
     "ChunkOpBatch",
     "ChunkRead",
+    "ChunkReadBatch",
+    "ChunkReadBatchReply",
     "DecrefBatch",
     "DigestReply",
     "DigestRequest",

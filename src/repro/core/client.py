@@ -1,7 +1,8 @@
 """DedupClient — the public client session over a DedupCluster.
 
 The session facade is the single write/read surface
-(``put``/``put_many``/``get``/``delete``/``flush``/``close``); the
+(``put``/``put_many``/``get``/``get_many``/``delete``/``flush``/
+``close``); the
 legacy ``DedupCluster.write_object``/``write_objects`` entry points are
 thin shims over a cache-disabled default session. A session owns the two
 bounded caches from ``core/write_cache.py``:
@@ -15,7 +16,9 @@ bounded caches from ``core/write_cache.py``:
   whole batch, handing each wave to the cluster's coalesced
   ``_write_wave`` engine — wave k is on the wire while wave k+1 chunks;
 * the **presence cache** (``presence_cache`` > 0): a bounded LRU
-  fingerprint set taught by acked write outcomes. Hits turn repeat
+  fingerprint set taught by acked write outcomes and by batched read
+  hits (restored chunk bytes are the same positive existence evidence
+  an acked write outcome is). Hits turn repeat
   chunks into presence-asserted ref-only ops — no bytes travel and no
   CIT probe is booked. A presence-enabled session registers itself on
   the transport (``extra_handlers``) under its session id and receives
@@ -114,7 +117,19 @@ class DedupClient:
     def get(self, name: str) -> bytes:
         self._check_open()
         self._drain_pending()  # read-your-writes
-        return self.cluster.read_object(name)
+        return self.cluster.read_objects([name], session=self)[0]
+
+    def get_many(self, names: list[str]) -> list[bytes]:
+        """Coalesced batch restore: plan every object at once and fetch
+        each node's chunks in one ``ChunkReadBatch`` unicast, with
+        cross-object duplicate-fetch elision — see
+        ``DedupCluster.read_objects``. Returns the objects' bytes in
+        request order. Acked hits teach this session's presence cache
+        (restored bytes are existence evidence, same as an acked write),
+        so a restore primes subsequent ``put``s for probe elision."""
+        self._check_open()
+        self._drain_pending()  # read-your-writes
+        return self.cluster.read_objects(list(names), session=self)
 
     def delete(self, name: str) -> bool:
         self._check_open()

@@ -53,6 +53,7 @@ from repro.core.messages import (
     ChunkOp,
     ChunkOpBatch,
     ChunkRead,
+    ChunkReadBatch,
     DecrefBatch,
     OmapDelete,
     OmapGet,
@@ -106,6 +107,13 @@ class ClusterStats:
         self.cache_invalidations = 0   # fps dropped by PresenceInvalidate
         self.presence_fallbacks = 0    # stale presence -> byte resends
         self.peak_dirty_bytes = 0      # high-water dirty chunk bytes (host)
+        # Coalesced restore engine counters (read_objects). fetch_elisions
+        # is the read-side twin of probe_elisions: duplicate fingerprint
+        # references inside one restore batch whose bytes were fetched once
+        # and reused (the first-reader cache), never re-requested.
+        self.read_batches = 0          # ChunkReadBatch unicasts planned
+        self.read_fallback_rounds = 0  # follow-up waves re-requesting misses
+        self.fetch_elisions = 0        # duplicate chunk fetches elided
 
     @property
     def net_bytes(self) -> int:
@@ -207,6 +215,9 @@ class ClusterStats:
             "cache_invalidations": self.cache_invalidations,
             "presence_fallbacks": self.presence_fallbacks,
             "peak_dirty_bytes": self.peak_dirty_bytes,
+            "read_batches": self.read_batches,
+            "read_fallback_rounds": self.read_fallback_rounds,
+            "fetch_elisions": self.fetch_elisions,
         }
 
     def __repr__(self) -> str:  # debugging convenience
@@ -235,6 +246,11 @@ class DedupCluster:
     # Cross-object unicast coalescing: one ChunkOpBatch per node for a whole
     # write_objects() batch (False reproduces the per-object message shape).
     coalesce_batches: bool = True
+    # Coalesced restore: one ChunkReadBatch per target node for a whole
+    # read_objects() batch, with cross-object duplicate-fetch elision
+    # (False reproduces the serial per-chunk ChunkRead shape — the read
+    # oracle the batched engine is proven byte-identical to).
+    batch_reads: bool = True
     # At-least-once delivery: retransmissions chasing a lost message/ack
     # (0 = legacy fire-and-forget) and the simulated-ticks ack timeout per
     # attempt. None = unset: inherit the transport's settings (an injected
@@ -966,6 +982,145 @@ class DedupCluster:
 
     # ------------------------------------------------------------------ read
     def read_object(self, name: str) -> bytes:
+        """Complete read transaction for one object. Rides the coalesced
+        restore engine as a one-object batch (``batch_reads=False``
+        reproduces the serial per-chunk ``ChunkRead`` shape)."""
+        return self.read_objects([name])[0]
+
+    def read_objects(
+        self, names: list[str], session=None, frag_out: list | None = None
+    ) -> list[bytes]:
+        """Coalesced batch restore — the read-side mirror of the write
+        path's wave architecture. Plans the WHOLE batch of objects at once:
+
+        1. OMAP probes grouped per primary node (same per-name replica
+           fallback and message count as the serial path — only the probe
+           order changes, so one node answers its run of names back to
+           back);
+        2. a batch-local fp->bytes first-reader cache collapses duplicate
+           fingerprint references across (and within) the batch's recipes
+           — a chunk shared by many objects travels the wire exactly once
+           (``ClusterStats.fetch_elisions``), the read-side twin of the
+           write path's first-writer cache;
+        3. one ``ChunkReadBatch`` per target node carries every distinct
+           fp routed there (``read_batches``);
+        4. degraded reads stay batched: a reply reports per-fp hit/miss,
+           and ONLY the misses are re-requested from each fp's next
+           untried live replica in a follow-up wave
+           (``read_fallback_rounds``); replicas exhausted raises
+           ``ReadError`` — the serial path's failure surface.
+
+        Per acked hit, ``session.presence_note`` teaches the session's
+        presence cache (restored bytes are positive existence evidence —
+        same currency as an acked write outcome). ``frag_out``, when given
+        a list, receives one restore-fragmentation record per object:
+        ``{"name", "chunks", "nodes", "max_chunks_one_node"}`` (distinct
+        serving nodes touched, and the largest chunk run any single node
+        served — the spread ROADMAP item 5's placement work is judged
+        against). Objects come back in request order, each verified
+        against its recipe's layout fingerprint."""
+        if not self.batch_reads:
+            return [self._read_object_serial(n) for n in names]
+
+        # -- plan: OMAP probes grouped per (live-)primary node ------------
+        by_primary: dict[str, list[int]] = {}
+        for idx, name in enumerate(names):
+            live = self._live(self.omap_targets(name))
+            by_primary.setdefault(live[0] if live else "", []).append(idx)
+        entries: list[OMAPEntry | None] = [None] * len(names)
+        for primary in sorted(by_primary):
+            for idx in by_primary[primary]:
+                entries[idx] = self._omap_lookup(names[idx], src="client")
+        for name, entry in zip(names, entries):
+            if entry is None:
+                raise ReadError(f"object {name!r} not found")
+
+        # -- first-reader cache: distinct fps only, in first-appearance order
+        need: list[Fingerprint] = []
+        seen_fps: set[Fingerprint] = set()
+        total_refs = 0
+        for entry in entries:
+            for fp in entry.chunk_fps:
+                total_refs += 1
+                if fp not in seen_fps:
+                    seen_fps.add(fp)
+                    need.append(fp)
+        self.stats.fetch_elisions += total_refs - len(need)
+
+        # -- fetch waves: one ChunkReadBatch per target node per wave -----
+        fetched: dict[Fingerprint, bytes] = {}
+        served_by: dict[Fingerprint, str] = {}
+        tried: dict[Fingerprint, set[str]] = {fp: set() for fp in need}
+        pending = need
+        last: Exception | None = None
+        first_wave = True
+        while pending:
+            per_node: dict[str, list[Fingerprint]] = {}
+            for fp in pending:
+                t = next(
+                    (t for t in self._live(self.chunk_targets(fp))
+                     if t not in tried[fp]),
+                    None,
+                )
+                if t is None:
+                    raise ReadError(
+                        f"chunk {fp} unreadable on all replicas: {last}"
+                    )
+                tried[fp].add(t)
+                per_node.setdefault(t, []).append(fp)
+            if not first_wave:
+                self.stats.read_fallback_rounds += 1
+            first_wave = False
+            misses: list[Fingerprint] = []
+            for t in sorted(per_node):
+                fps = per_node[t]
+                self.stats.read_batches += 1
+                try:
+                    reply = self.transport.send(
+                        "client", t, ChunkReadBatch(tuple(fps)), self.now
+                    )
+                except (MessageDropped, NodeDown) as e:
+                    # The whole unicast failed: every fp it carried walks
+                    # on to its next replica in the follow-up wave.
+                    last = e
+                    misses.extend(fps)
+                    continue
+                for fp, data in zip(fps, reply.chunks):
+                    if data is None:
+                        last = ChunkMissing(t, fp)
+                        misses.append(fp)
+                    else:
+                        fetched[fp] = data
+                        served_by[fp] = t
+                        if session is not None:
+                            session.presence_note(fp)
+            pending = misses
+
+        # -- assemble + verify per object, in request order ---------------
+        out: list[bytes] = []
+        for name, entry in zip(names, entries):
+            data = b"".join(fetched[fp] for fp in entry.chunk_fps)
+            if object_fp(entry.chunk_fps) != entry.object_fp:
+                raise ReadError(f"object {name!r}: layout fingerprint mismatch")
+            self.stats.reads_ok += 1
+            if frag_out is not None and entry.chunk_fps:
+                per_node_counts: dict[str, int] = {}
+                for fp in entry.chunk_fps:
+                    t = served_by[fp]
+                    per_node_counts[t] = per_node_counts.get(t, 0) + 1
+                frag_out.append({
+                    "name": name,
+                    "chunks": len(entry.chunk_fps),
+                    "nodes": len(per_node_counts),
+                    "max_chunks_one_node": max(per_node_counts.values()),
+                })
+            out.append(data)
+        return out
+
+    def _read_object_serial(self, name: str) -> bytes:
+        """The pre-batching read shape (one OMAP probe, then one serial
+        ``ChunkRead`` per chunk with per-chunk replica walking) — kept as
+        the oracle the batched engine is proven byte-identical to."""
         entry = self._omap_lookup(name, src="client")
         if entry is None:
             raise ReadError(f"object {name!r} not found")
@@ -1003,9 +1158,7 @@ class DedupCluster:
 
     def _read_chunk(self, fp: Fingerprint) -> bytes:
         last: Exception | None = None
-        for t in self.chunk_targets(fp):
-            if not self.nodes[t].alive:
-                continue
+        for t in self._live(self.chunk_targets(fp)):
             try:
                 return self.transport.send("client", t, ChunkRead(fp), self.now)
             except (ChunkMissing, MessageDropped, NodeDown) as e:

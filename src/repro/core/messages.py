@@ -227,6 +227,45 @@ class ChunkRead(Message):
 
 
 @dataclass(frozen=True)
+class ChunkReadBatch(Message):
+    """One unicast fetching many chunks from one node — possibly for many
+    objects (the restore-side twin of ``ChunkOpBatch``'s cross-object
+    coalescing: ``read_objects`` emits one of these per target node per
+    wave, after eliding intra-batch duplicate fingerprints through its
+    first-reader cache). Control-only on the request wire, like
+    ``ChunkRead``; the returned chunk bytes are charged as response
+    payload via ``ChunkReadBatchReply.reply_bytes`` so payload parity
+    with the serial shape holds exactly. Reads are content-addressed
+    fetches, not CIT queries, so ``lookups()`` stays 0 — same as the
+    serial read path."""
+
+    TYPE = "chunk_read_batch"
+    fps: tuple[Fingerprint, ...] = ()
+
+    def response_payload_bytes(self, response) -> int:
+        if isinstance(response, ChunkReadBatchReply):
+            return response.reply_bytes()
+        return 0
+
+
+@dataclass(frozen=True)
+class ChunkReadBatchReply(Message):
+    """Per-fp outcome of a ``ChunkReadBatch``, parallel to the request's
+    ``fps``: the chunk bytes on a hit, ``None`` on a miss (bytes absent —
+    or corrupt — on this replica). Reporting misses per fp instead of
+    raising lets one degraded chunk fail alone: the sender re-requests
+    ONLY the misses from the next untried replica in a follow-up batch
+    (``ClusterStats.read_fallback_rounds``) while the hits are kept.
+    Wire cost is the hit bytes; misses ride the control header for free."""
+
+    TYPE = "chunk_read_batch_reply"
+    chunks: tuple = ()  # tuple[bytes | None, ...] parallel to request fps
+
+    def reply_bytes(self) -> int:
+        return sum(len(b) for b in self.chunks if b is not None)
+
+
+@dataclass(frozen=True)
 class MigrateChunk(Message):
     """Rebalance/scrub move: chunk bytes (``data``; None when the
     destination already holds them) plus the CIT entry snapshot that travels
@@ -442,6 +481,8 @@ MESSAGE_TYPES = (
     DecrefBatch,
     RefOnlyWrite,
     ChunkRead,
+    ChunkReadBatch,
+    ChunkReadBatchReply,
     MigrateChunk,
     DigestRequest,
     DigestReply,

@@ -19,6 +19,8 @@ from repro.core.messages import (
     ChunkOp,
     ChunkOpBatch,
     ChunkRead,
+    ChunkReadBatch,
+    ChunkReadBatchReply,
     DecrefBatch,
     DigestReply,
     DigestRequest,
@@ -189,7 +191,9 @@ class StorageNode:
         # probes are reads too — a duplicated DigestRequest just recomputes
         # the same summary. RepairChunk / RefAudit / audit DecrefBatch are
         # mutating and ride the window like every other recovery-era write.
-        mutating = not isinstance(msg, (ChunkRead, OmapGet, DigestRequest))
+        mutating = not isinstance(
+            msg, (ChunkRead, ChunkReadBatch, OmapGet, DigestRequest)
+        )
         if env is not None:
             if env.msg_id in self._poisoned:
                 # A late copy of a message the sender already cancelled:
@@ -260,6 +264,8 @@ class StorageNode:
             return tuple(self._apply_ref_only(fp, now) for fp in msg.fps)
         if isinstance(msg, ChunkRead):
             return self.read_chunk(msg.fp, now)
+        if isinstance(msg, ChunkReadBatch):
+            return self._serve_read_batch(msg.fps, now)
         if isinstance(msg, MigrateChunk):
             return self._apply_migrate(msg, now)
         if isinstance(msg, DigestRequest):
@@ -543,6 +549,23 @@ class StorageNode:
             self.shard.cit_set_flag(fp, VALID, now)
             self.stats.repairs += 1
         return data
+
+    def _serve_read_batch(
+        self, fps: tuple[Fingerprint, ...], now: int
+    ) -> ChunkReadBatchReply:
+        """Serve a coalesced restore fetch: per-fp hit/miss instead of the
+        single-chunk raise, so one degraded chunk fails alone while the
+        rest of the batch is kept. Hits run the same read-path consistency
+        check as ``read_chunk`` (repair-on-read flag flip included). A
+        corrupt chunk reports a miss like absent bytes — the sender's
+        replica walk treats both as "this replica cannot serve it"."""
+        chunks: list[bytes | None] = []
+        for fp in fps:
+            try:
+                chunks.append(self.read_chunk(fp, now))
+            except (ChunkMissing, ChunkCorrupt):
+                chunks.append(None)
+        return ChunkReadBatchReply(tuple(chunks))
 
     def decref_chunk(self, fp: Fingerprint, now: int) -> None:
         self._require_alive()

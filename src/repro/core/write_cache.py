@@ -44,7 +44,10 @@ from repro.core.chunking import ChunkingSpec, chunk_object
 from repro.core.fingerprint import Fingerprint, fingerprint_many
 
 # Outcomes that prove a chunk is stored (bytes + CIT entry) on its owner —
-# the only evidence the presence cache accepts.
+# the only evidence the presence cache accepts. Batched restore hits
+# (``ChunkReadBatchReply`` chunks) carry the same proof — the bytes were
+# just served from their owner — so ``read_objects`` teaches sessions per
+# acked hit through the same ``note()`` path.
 PRESENCE_OUTCOMES = frozenset({"stored", "restored", "dedup_hit", "repaired"})
 
 
@@ -92,8 +95,9 @@ class PresenceCache:
         return False
 
     def note(self, fp: Fingerprint) -> None:
-        """Record positive evidence (an acked storing outcome) for ``fp``;
-        evicts the LRU entry beyond capacity."""
+        """Record positive evidence (an acked storing outcome, or a
+        batched read hit) for ``fp``; evicts the LRU entry beyond
+        capacity."""
         if fp in self._fps:
             self._fps.move_to_end(fp)
             return

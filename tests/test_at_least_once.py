@@ -38,6 +38,7 @@ from repro.core import (
     DedupCluster,
     MessageDropped,
     OmapPut,
+    ReadError,
     SeenWindow,
     Transport,
     UnsupportedTransportPolicy,
@@ -129,17 +130,22 @@ def test_out_of_order_arrival_is_counted():
 
 
 def test_reads_stay_out_of_the_seen_window():
-    """ChunkRead/OmapGet are not recorded: read traffic must not evict
-    mutating message ids from the bounded window (a duplicate read is
-    harmless to re-serve; a duplicate ref increment is not)."""
+    """ChunkRead/ChunkReadBatch/OmapGet are not recorded: read traffic must
+    not evict mutating message ids from the bounded window (a duplicate
+    read is harmless to re-serve; a duplicate ref increment is not)."""
     c = DedupCluster.create(2, chunking=CH)
     for node in c.nodes.values():
         node.seen.capacity = 4
     data = np.random.default_rng(30).bytes(2048)
     c.write_object("x", data)
     filled = {nid: len(n.seen) for nid, n in c.nodes.items()}
-    for _ in range(50):  # heavy read traffic through the transport
+    for _ in range(25):  # heavy batched read traffic (the default shape)
         assert c.read_object("x") == data
+    c.batch_reads = False
+    for _ in range(25):  # and the serial per-chunk oracle shape
+        assert c.read_object("x") == data
+    assert c.transport.msgs_by_type["chunk_read_batch"] > 0
+    assert c.transport.msgs_by_type["chunk_read"] > 0
     for nid, n in c.nodes.items():
         assert len(n.seen) == filled[nid], "reads must not consume window slots"
 
@@ -535,6 +541,68 @@ def test_chaos_schedule_converges_to_reliable_oracle(chaos_seed):
             continue
         expected = pool[0] if name == "c3" else data
         assert c.read_object(name) == expected
+
+
+def test_read_chaos_batched_restore_matches_serial_oracle(chaos_seed):
+    """Read-under-chaos: batched restores are byte-identical to the serial
+    read oracle under drop / duplicate / reorder / combined-chaos policies
+    (one family per seed, so the sweep covers each), and read traffic —
+    retried, duplicated, or re-walked across replicas — neither consumes
+    seen-window slots nor mutates converged cluster state."""
+    rng = np.random.default_rng(2000 + chaos_seed)
+    pool = [rng.bytes(2560) for _ in range(3)]
+    items = [
+        (f"r{i}", pool[i % len(pool)] + rng.bytes(512 * (i % 3)))
+        for i in range(8)
+    ]
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    c.write_objects(list(items))
+    settle(c)
+
+    # serial oracle bytes, read on the still-reliable transport
+    c.batch_reads = False
+    oracle = [c.read_object(n) for n, _ in items]
+    assert oracle == [d for _, d in items]
+    c.batch_reads = True
+    before = cluster_state(c)
+    filled = {nid: len(n.seen) for nid, n in c.nodes.items()}
+
+    policies = {
+        "drop": drop(0.15, seed=chaos_seed),
+        "duplicate": duplicate(0.25, seed=chaos_seed, lag=2),
+        "reorder": reorder(0.2, seed=chaos_seed),
+        "chaos": chaos(seed=chaos_seed, p_drop=0.12, p_dup=0.15,
+                       p_reorder=0.08, p_ack_drop=0.1),
+    }
+    family = sorted(policies)[chaos_seed % len(policies)]
+    c.transport.policy = policies[family]
+    c.transport.retry_budget = 12
+
+    names = [n for n, _ in items]
+    for attempt in range(6):
+        try:
+            got = c.read_objects(names)
+            break
+        except ReadError:
+            continue  # every replica walk lost under chaos: client retries
+    else:
+        raise AssertionError(
+            f"read-chaos {family} seed {chaos_seed}: restore did not complete "
+            f"in 6 client retries (repro: CHAOS_SEED_BASE={chaos_seed} "
+            f"CHAOS_SCHEDULES=1)"
+        )
+    assert got == oracle, (
+        f"read-chaos {family} seed {chaos_seed}: batched restore diverged "
+        f"from the serial oracle (repro: CHAOS_SEED_BASE={chaos_seed} "
+        f"CHAOS_SCHEDULES=1)"
+    )
+    # land late duplicate copies, then: reads mutated nothing, and no read
+    # message id consumed a seen-window slot (reads stay out, like today)
+    c.transport.policy = reliable()
+    c.tick(30)
+    assert cluster_state(c) == before
+    for nid, n in c.nodes.items():
+        assert len(n.seen) == filled[nid], "read chaos must not touch seen-windows"
 
 
 # ------------------------------------------------------- baselines reject

@@ -11,7 +11,8 @@ running the same workload.
 The workload exercises every mutating message type at least once:
 ChunkOpBatch (write), RefOnlyWrite (ref-write), DecrefBatch (delete),
 OmapPut/OmapGet/OmapDelete (commit/probe/delete), MigrateChunk
-(add_node + scrub), ChunkRead (reads).
+(add_node + scrub), ChunkReadBatch (batched reads, the default restore
+shape) and ChunkRead (the serial oracle shape).
 """
 
 import numpy as np
@@ -24,6 +25,7 @@ from hypothesis import HealthCheck, given, settings
 from repro.core import (
     ChunkOpBatch,
     ChunkRead,
+    ChunkReadBatch,
     ChunkingSpec,
     DecrefBatch,
     DedupCluster,
@@ -45,6 +47,7 @@ ALL_TYPES = (
     DecrefBatch,
     RefOnlyWrite,
     ChunkRead,
+    ChunkReadBatch,
     MigrateChunk,
 )
 
@@ -61,8 +64,10 @@ def run_workload(c, rng_seed: int, n_objects: int, with_topology_change: bool):
     c.write_object("o0", pool[1])                    # replace
     c.delete_object("o1")                            # delete -> DecrefBatch
     assert c.write_object_by_ref("ref", "o2") is not None   # RefOnlyWrite
-    for name, _ in items[3:5]:
-        c.read_object(name)                          # ChunkRead traffic
+    c.read_objects([name for name, _ in items[3:5]])  # ChunkReadBatch traffic
+    c.batch_reads = False
+    c.read_object(items[3][0])                       # serial ChunkRead traffic
+    c.batch_reads = True
     if with_topology_change:
         c.add_node()                                 # MigrateChunk traffic
         c.scrub()

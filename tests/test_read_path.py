@@ -1,0 +1,242 @@
+"""Coalesced batch restore engine (DedupCluster.read_objects /
+DedupClient.get_many).
+
+The contract under test: the batched engine is byte-identical to the
+serial read oracle (``batch_reads=False``) on every workload, while
+collapsing the message count to one ChunkReadBatch per target node and
+fetching every distinct chunk of a batch exactly once (the first-reader
+cache). Degraded reads stay batched — per-fp misses walk to the next
+replica in follow-up waves — and an all-replica miss composes with the
+recovery subsystem (RepairChunk) exactly like the serial path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkingSpec,
+    DedupCluster,
+    INVALID,
+    ReadError,
+    VALID,
+)
+
+CH = ChunkingSpec("fixed", 1024)
+
+
+def workload(seed=7, n_items=16, obj_bytes=4096, pool=4):
+    """~50% duplicate chunks across objects (two pool blocks each)."""
+    rng = np.random.default_rng(seed)
+    blocks = [rng.bytes(obj_bytes // 2) for _ in range(pool)]
+    return [
+        (f"o{i}", blocks[i % pool] + blocks[(i + 1) % pool])
+        for i in range(n_items)
+    ]
+
+
+def populated(items, **kw):
+    c = DedupCluster.create(4, replicas=2, chunking=CH, **kw)
+    c.write_objects(list(items))
+    c.tick(3)
+    return c
+
+
+def read_deltas(c, names, **kw):
+    m0, n0 = c.stats.control_msgs, c.stats.net_bytes
+    a0 = c.stats.ack_bytes
+    data = c.read_objects(names, **kw)
+    return (
+        data,
+        c.stats.control_msgs - m0,
+        c.stats.net_bytes - n0,
+        c.stats.ack_bytes - a0,
+    )
+
+
+# ------------------------------------------------------------ equivalence
+def test_batched_restore_byte_identical_to_serial_oracle():
+    items = workload()
+    names = [n for n, _ in items]
+    serial = populated(items)
+    serial.batch_reads = False
+    oracle, msgs_serial, _, _ = read_deltas(serial, names)
+    assert oracle == [d for _, d in items]
+
+    batched = populated(items)
+    got, msgs_batched, _, _ = read_deltas(batched, names)
+    assert got == oracle
+    # one OMAP probe per name either way; chunk fetches collapse from one
+    # ChunkRead per recipe reference to one ChunkReadBatch per node
+    assert msgs_serial / msgs_batched >= 3
+    assert batched.stats.read_batches <= len(batched.nodes)
+    assert batched.stats.read_fallback_rounds == 0
+    assert batched.transport.msgs_by_type.get("chunk_read", 0) == 0
+
+
+def test_first_reader_cache_fetches_each_distinct_chunk_once():
+    """Duplicate chunk references across the batch travel the wire exactly
+    once: the read payload equals the batch's DISTINCT chunk bytes, and
+    fetch_elisions books every reference the cache absorbed."""
+    items = workload()
+    names = [n for n, _ in items]
+    c = populated(items)
+
+    recipes = [c._omap_lookup(n) for n in names]
+    total_refs = sum(len(e.chunk_fps) for e in recipes)
+    distinct = {fp for e in recipes for fp in e.chunk_fps}
+
+    def chunk_len(fp):
+        for n in c.nodes.values():
+            b = n.chunk_store.get(fp)
+            if b is not None:
+                return len(b)
+        raise AssertionError(f"chunk {fp} stored nowhere")
+
+    distinct_bytes = sum(chunk_len(fp) for fp in distinct)
+
+    _, msgs, net, acks = read_deltas(c, names)
+    # request payloads are 0 for reads and net_bytes carries no control
+    # headers (those are wire_bytes), so net - acks IS the response payload
+    assert net - acks == distinct_bytes
+    assert c.stats.fetch_elisions == total_refs - len(distinct)
+    assert c.stats.fetch_elisions > 0
+
+    # serial oracle pays for every reference
+    s = populated(items)
+    s.batch_reads = False
+    _, msgs_s, net_s, acks_s = read_deltas(s, names)
+    assert net_s - acks_s == sum(e.size for e in recipes)
+    assert msgs_s > msgs
+
+
+def test_fragmentation_records_per_object():
+    items = workload(n_items=6)
+    names = [n for n, _ in items]
+    c = populated(items)
+    frag = []
+    data, *_ = read_deltas(c, names, frag_out=frag)
+    assert [f["name"] for f in frag] == names
+    recipes = [c._omap_lookup(n) for n in names]
+    for f, e in zip(frag, recipes):
+        assert f["chunks"] == len(e.chunk_fps)
+        assert 1 <= f["nodes"] <= len(c.nodes)
+        # the busiest node serves at least the mean share, at most all
+        assert f["max_chunks_one_node"] * f["nodes"] >= f["chunks"]
+        assert f["max_chunks_one_node"] <= f["chunks"]
+
+
+# ---------------------------------------------------------- degraded reads
+def test_per_fp_miss_walks_to_next_replica_in_fallback_round():
+    items = workload(n_items=4)
+    c = populated(items)
+    entry = c._omap_lookup("o0")
+    fp = entry.chunk_fps[0]
+    first, second = c.chunk_targets(fp)[:2]
+    # lose the bytes on the first replica only: the CIT survives, so the
+    # first wave's reply reports a per-fp miss (not an exception) and ONLY
+    # this fp is re-requested from the second replica
+    c.nodes[first].chunk_store.pop(fp)
+    data, *_ = read_deltas(c, [n for n, _ in items])
+    assert data == [d for _, d in items]
+    assert c.stats.read_fallback_rounds == 1
+
+
+def test_crashed_node_excluded_at_plan_time():
+    items = workload(n_items=6)
+    c = populated(items)
+    crashed = next(iter(c.nodes))
+    c.crash_node(crashed)
+    data = c.read_objects([n for n, _ in items])
+    assert data == [d for _, d in items]
+    # liveness was known at plan time: no wave was wasted on the dead node
+    assert c.stats.read_fallback_rounds == 0
+
+
+def test_repair_on_read_flag_flip_preserved_in_batch():
+    """PR 4's repair-on-read: a hit on an INVALID-but-present chunk flips
+    the flag back to VALID — the batched handler runs the same read-path
+    consistency check per fp as the serial one."""
+    items = workload(n_items=2)
+    c = populated(items)
+    fp = c._omap_lookup("o0").chunk_fps[0]
+    target = c.chunk_targets(fp)[0]
+    node = c.nodes[target]
+    node.shard.cit_set_flag(fp, INVALID, c.now)
+    repairs = node.stats.repairs
+    assert c.read_object("o0") == items[0][1]
+    assert node.shard.cit_lookup(fp).flag == VALID
+    assert node.stats.repairs == repairs + 1
+
+
+def test_all_replica_miss_falls_back_to_recovery_repair():
+    """Satellite regression: an all-replica miss inside a ChunkReadBatch
+    surfaces as ReadError (same failure surface as the serial walk), a
+    recovery round repairs the chunk from the surviving copy (RepairChunk),
+    and the retried batch succeeds."""
+    items = workload(n_items=4)
+    names = [n for n, _ in items]
+    c = populated(items)
+    fp = c._omap_lookup("o0").chunk_fps[0]
+    first, second = c.chunk_targets(fp)[:2]
+    c.nodes[first].chunk_store.pop(fp)   # bytes lost on one replica...
+    c.crash_node(second)                 # ...and the other is down
+    with pytest.raises(ReadError):
+        c.read_objects(names)
+    # recovery: the restarted replica's digest disagrees on has_bytes,
+    # so scrub ships the chunk back to the degraded one
+    c.restart_node(second)
+    c.scrub()
+    c.tick(3)
+    assert c.transport.msgs_by_type.get("repair_chunk", 0) > 0
+    assert fp in c.nodes[first].chunk_store
+    assert c.read_objects(names) == [d for _, d in items]
+
+
+def test_missing_object_raises_read_error():
+    c = populated(workload(n_items=2))
+    with pytest.raises(ReadError):
+        c.read_objects(["o0", "nope"])
+    with pytest.raises(ReadError):
+        c.read_object("nope")
+
+
+# ------------------------------------------------------------- client facade
+def test_get_many_reads_your_writes_and_orders_results():
+    c = DedupCluster.create(4, chunking=CH)
+    s = c.client()
+    s.put("a", b"x" * 2048)
+    s.put("b", b"y" * 2048)
+    # buffered puts drain before the batch restore plans anything
+    assert s.get_many(["b", "a"]) == [b"y" * 2048, b"x" * 2048]
+    s.close()
+
+
+def test_batched_read_hits_teach_presence_cache():
+    """Restored chunks are existence evidence: after a get_many, putting
+    the same content through the session elides the CIT probes the
+    presence cache now answers — a restore primes subsequent writes."""
+    items = workload(n_items=8)
+    c = populated(items)
+    s = c.client(presence_cache=512)
+    s.get_many([n for n, _ in items])
+    pe0, lookups0 = c.stats.probe_elisions, c.stats.lookup_unicasts
+    s.put_many([(f"copy{i}", d) for i, (_, d) in enumerate(items)])
+    assert c.stats.probe_elisions > pe0
+    s.close()
+
+    # oracle without a presence cache: same writes carry full lookups
+    c2 = populated(items)
+    s2 = c2.client()
+    s2.get_many([n for n, _ in items])
+    l0 = c2.stats.lookup_unicasts
+    s2.put_many([(f"copy{i}", d) for i, (_, d) in enumerate(items)])
+    assert (c.stats.lookup_unicasts - lookups0) < (c2.stats.lookup_unicasts - l0)
+    s2.close()
+
+
+def test_empty_batch_and_empty_object():
+    c = DedupCluster.create(2, chunking=CH)
+    assert c.read_objects([]) == []
+    c.write_object("empty", b"")
+    assert c.read_objects(["empty"]) == [b""]
+    assert c.stats.read_batches == 0  # nothing to fetch either time

@@ -75,6 +75,13 @@ def test_wire_bytes_identity_and_per_edge_stats():
     assert sum(e.payload_bytes for e in edges.values()) >= len(data)
     assert t.msgs_by_type["omap_put"] >= 1
     assert t.msgs_by_type["chunk_op_batch"] >= 1
+    # batched restore: one ChunkReadBatch per node holding chunks (the 8
+    # chunks land on 3 of the 4 nodes), not one ChunkRead per chunk
+    assert t.msgs_by_type["chunk_read_batch"] == 3
+    assert "chunk_read" not in t.msgs_by_type
+    # the serial per-chunk shape is preserved behind batch_reads=False
+    c.batch_reads = False
+    assert c.read_object("a") == data
     assert t.msgs_by_type["chunk_read"] == 8  # one per chunk
 
 
@@ -112,10 +119,14 @@ def test_stats_parity_with_pre_transport_accounting():
     digest_bytes = 40 * 16
     assert c.stats.net_bytes - c.stats.ack_bytes - digest_bytes == 127200
     assert c.stats.ack_bytes == 64 * c.transport.deliveries
-    assert c.stats.net_bytes == 137696        # 127200 + 640 + 64 * 154 deliveries
+    # PR 9 coalesced the restore path (one ChunkReadBatch per node instead
+    # of one ChunkRead per chunk): 10 fewer read messages/acks than the
+    # serial shape, while the PAYLOAD parity above is untouched — the same
+    # chunk bytes cross the wire, under fewer control headers.
+    assert c.stats.net_bytes == 137056        # 127200 + 640 + 64 * 144 deliveries
     assert c.stats.lookup_unicasts == 76      # pre-refactor exact
     assert c.stats.lookup_broadcasts == 0
-    assert c.stats.control_msgs == 154        # transport message count (+6 digests)
+    assert c.stats.control_msgs == 144        # transport message count (+6 digests)
     assert c.stats.retransmits == 0           # reliable policy: no retries
     assert c.stats.rebalance_bytes_moved == 12079
     assert c.stats.rebalance_chunks_moved == 13

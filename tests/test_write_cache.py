@@ -167,6 +167,8 @@ def test_stats_snapshot_deterministic_and_complete():
     c1, c2 = mk(), mk()
     c1.write_objects(items)
     c2.write_objects(items)
+    c1.read_objects([n for n, _ in items])
+    c2.read_objects([n for n, _ in items])
     s1, s2 = c1.stats.snapshot(), c2.stats.snapshot()
     assert s1 == s2
     for col in (
@@ -178,8 +180,13 @@ def test_stats_snapshot_deterministic_and_complete():
         "cache_evictions",
         "presence_fallbacks",
         "peak_dirty_bytes",
+        "read_batches",
+        "read_fallback_rounds",
+        "fetch_elisions",
     ):
         assert col in s1
+    assert s1["read_batches"] > 0
+    assert s1["fetch_elisions"] > 0  # the 50%-dup workload shares chunks
 
 
 # ------------------------------------------------------------ client facade
