@@ -135,6 +135,44 @@ DETERMINISTIC_COLUMNS = [
     ("always_on", "tombstone_reap_msgs"),
     ("always_on", "tombstones_reaped"),
     ("always_on", "audit_deferred"),
+    # multi-tenant scheduled workload: op outcomes, modeled tick latency
+    # percentiles, interleaving witnesses (max in-flight sessions, waves
+    # overlapped, superseded commits), per-edge/NIC contention maxima and
+    # the seen-window sizing sweep are exact functions of the spec seed —
+    # drift means the scheduler's event order, the wave pipeline, or the
+    # wire shape changed. These measured margins replace the old fixed
+    # 25%-of-capacity seen-window assertion. Only workload_wall_s is noise.
+    ("multi_tenant", "clients"),
+    ("multi_tenant", "objects"),
+    ("multi_tenant", "ops_total"),
+    ("multi_tenant", "puts_ok"),
+    ("multi_tenant", "gets_ok"),
+    ("multi_tenant", "deletes_ok"),
+    ("multi_tenant", "not_found"),
+    ("multi_tenant", "failures"),
+    ("multi_tenant", "bytes_written"),
+    ("multi_tenant", "latency_p50_ticks"),
+    ("multi_tenant", "latency_p99_ticks"),
+    ("multi_tenant", "elapsed_ticks"),
+    ("multi_tenant", "scheduler_steps"),
+    ("multi_tenant", "max_in_flight_sessions"),
+    ("multi_tenant", "waves_overlapped"),
+    ("multi_tenant", "writes_superseded"),
+    ("multi_tenant", "probe_elisions"),
+    ("multi_tenant", "cache_hits"),
+    ("multi_tenant", "net_bytes"),
+    ("multi_tenant", "control_msgs"),
+    ("multi_tenant", "busiest_edge"),
+    ("multi_tenant", "busiest_edge_payload"),
+    ("multi_tenant", "node_ingress_max"),
+    ("multi_tenant", "node_egress_max"),
+    ("multi_tenant", "seen_window_capacity"),
+    ("multi_tenant", "seen_high_water_c2"),
+    ("multi_tenant", "seen_high_water_c4"),
+    ("multi_tenant", "seen_high_water_c8"),
+    ("multi_tenant", "seen_margin_pct_c8"),
+    ("multi_tenant", "modeled_time_uniform_s"),
+    ("multi_tenant", "modeled_time_per_edge_s"),
 ]
 
 

@@ -48,6 +48,40 @@ def straggler_nic_seconds(cluster, tb: Testbed = DEFAULT) -> float:
     return worst / tb.net_Bps_per_node
 
 
+def per_edge_maxima(cluster) -> dict:
+    """Deterministic per-edge contention summary for the multi-tenant
+    workload report and the ``multi_tenant`` bench columns: the busiest
+    edge (by payload bytes) and the busiest node NIC lanes (ingress /
+    egress payload maxima over the transport's per-edge accounting —
+    the same aggregation ``straggler_nic_seconds`` prices). Only node
+    ids count toward NIC lanes, so client endpoints (``client``, ``c0``
+    ...) contribute load to nodes without being mistaken for one. Ties
+    break on the lexicographically first edge key — deterministic across
+    runs and interpreters (edge keys are strings, never hash-ordered)."""
+    edges = cluster.transport.edges
+    busiest_key, busiest_payload = "", 0
+    for key in sorted(edges, key=lambda k: (k[0], k[1])):
+        p = edges[key].payload_bytes
+        if p > busiest_payload:
+            busiest_key, busiest_payload = f"{key[0]}->{key[1]}", p
+    ingress: dict[str, int] = {}
+    egress: dict[str, int] = {}
+    for (src, dst), e in edges.items():
+        egress[src] = egress.get(src, 0) + e.payload_bytes
+        ingress[dst] = ingress.get(dst, 0) + e.payload_bytes
+    return {
+        "edges": len(edges),
+        "busiest_edge": busiest_key,
+        "busiest_edge_payload": busiest_payload,
+        "node_ingress_max": max(
+            (ingress.get(nid, 0) for nid in cluster.nodes), default=0
+        ),
+        "node_egress_max": max(
+            (egress.get(nid, 0) for nid in cluster.nodes), default=0
+        ),
+    }
+
+
 def modeled_time_clusterwide(
     cluster,
     tb: Testbed = DEFAULT,

@@ -93,6 +93,8 @@ from repro.core.fingerprint import (
     sha256_fp,
 )
 from repro.core.placement import ClusterMap, place, primary
+from repro.core.simclock import Scheduler, SimClock
+from repro.core.workload import ClientRecord, WorkloadOp, WorkloadSpec, run_workload
 
 __all__ = [
     "ChunkSpec",
@@ -173,4 +175,10 @@ __all__ = [
     "reorder",
     "ack_loss",
     "chaos",
+    "Scheduler",
+    "SimClock",
+    "ClientRecord",
+    "WorkloadOp",
+    "WorkloadSpec",
+    "run_workload",
 ]

@@ -51,12 +51,21 @@ class DedupClient:
     cluster: object
     presence_cache: int = 0
     wave_bytes: int = 0
+    # Transport endpoint name for everything this session sends. The
+    # default keeps every legacy edge key ("client" -> node) byte-identical;
+    # concurrent workload sessions open with distinct names (c0, c1, ...)
+    # so per-edge stats attribute contention per client.
+    src: str = "client"
     session_id: str | None = None
     closed: bool = False
     presence: PresenceCache | None = field(default=None, repr=False)
     wcache: WriteBackCache | None = field(default=None, repr=False)
     pending: PendingWrites | None = field(default=None, repr=False)
     invalidations_received: int = 0
+    # Scheduled-session state: nonzero while a wave this session sent is
+    # un-committed (in flight). The Scheduler's event log reads it to
+    # record which sessions were concurrently in flight at each step.
+    in_flight: int = 0
 
     def __post_init__(self) -> None:
         c = self.cluster
@@ -230,3 +239,72 @@ class DedupClient:
         for wave in self.wcache.waves(items):
             out.extend(c._write_wave(wave, session=self))
         return out
+
+    # ------------------------------------------------------- scheduled session
+    def put_wave_actor(
+        self, items: list[tuple[str, bytes]], commit_sink: list | None = None
+    ):
+        """Resumable ``put_many``: a generator actor for the discrete-event
+        ``Scheduler`` (core/simclock.py). Yields an integer tick delay
+        after each wave's SEND, deferring its COMMIT until the actor is
+        resumed — the window in which other sessions' actors run, so N
+        sessions genuinely interleave waves on one cluster.
+
+        Pipelining: on resume, the ``waves`` generator chunks +
+        fingerprints wave k+1 FIRST (while wave k is still un-committed —
+        counted in ``stats.waves_overlapped``, the PR 8 caveat closed),
+        then wave k commits, then wave k+1 plans. The commit-before-plan
+        order is load-bearing — a wave split at a repeated name relies on
+        the previous wave's commit being visible to its plan-time lookup —
+        and because chunking emits no messages, the wire sequence is
+        IDENTICAL to the synchronous ``put_many`` for a single session
+        (the parity pin in tests/test_workload.py). Dirty-byte accounting
+        note: ``peak_dirty_bytes`` books one wave at a time even though
+        overlap keeps wave k's chunks resident while k+1 chunks — the
+        true pipelined peak is one send-window plus one chunking wave.
+
+        Returns ``(fps, committed)`` via ``StopIteration.value``: the
+        object fingerprints in item order, and the ``(name, version)``
+        commit records the concurrent-session oracle replays.
+        ``commit_sink``, when given a list, receives the same records
+        incrementally as each wave commits — they survive a mid-batch
+        ``WriteError`` (which a generator's return value does not), so a
+        chaos-faulted run still knows exactly which objects committed
+        before the failure."""
+        self._check_open()
+        c = self.cluster
+        out: list[Fingerprint] = []
+        committed = commit_sink if commit_sink is not None else []
+        pending_state: dict | None = None
+        try:
+            for wave in self.wcache.waves(items):
+                if pending_state is not None:
+                    # waves() just chunked this wave while the previous one
+                    # was still in flight: overlap occurred.
+                    c.stats.waves_overlapped += 1
+                    try:
+                        out.extend(c._wave_commit(pending_state, session=self))
+                    finally:
+                        committed.extend(pending_state["committed"])
+                        pending_state = None
+                        self.in_flight = 0
+                state = c._wave_plan(wave, session=self)
+                c._wave_send(state, session=self)
+                pending_state = state
+                self.in_flight = 1
+                yield 1
+            if pending_state is not None:
+                try:
+                    out.extend(c._wave_commit(pending_state, session=self))
+                finally:
+                    committed.extend(pending_state["committed"])
+                    pending_state = None
+                    self.in_flight = 0
+        finally:
+            if pending_state is not None:
+                # Abandoned mid-flight (generator closed, or an error before
+                # the commit): drop the audit registration so the refcount
+                # audit can eventually reconcile the orphaned refs.
+                c.release_inflight_wave(pending_state["batch_txn"])
+                self.in_flight = 0
+        return out, committed

@@ -94,9 +94,19 @@ class ClusterStats:
         self.logical_bytes_written = 0
         self.writes_ok = 0
         self.writes_failed = 0
+        # Commit-version races under concurrent sessions: the write landed
+        # (>=1 OMAP replica acked) but every replica's version gate refused
+        # it because a concurrent committer got there with a newer version
+        # first. Semantically a committed-then-instantly-replaced write:
+        # counted in writes_ok, its refs rolled back, never readable.
+        self.writes_superseded = 0
         self.reads_ok = 0
         self.rebalance_bytes_moved = 0
         self.rebalance_chunks_moved = 0
+        # Scheduled-session pipelining: waves whose k+1 chunking ran while
+        # wave k's chunk unicasts were still in flight (un-committed) — the
+        # overlap the discrete-event scheduler buys (see docs/concurrency.md).
+        self.waves_overlapped = 0
         # Write-back / presence cache counters (core/write_cache.py). The
         # caches of every DedupClient session on this cluster accumulate
         # here, so the columns are cluster-wide and survive session close.
@@ -193,6 +203,8 @@ class ClusterStats:
             "logical_bytes_written": self.logical_bytes_written,
             "writes_ok": self.writes_ok,
             "writes_failed": self.writes_failed,
+            "writes_superseded": self.writes_superseded,
+            "waves_overlapped": self.waves_overlapped,
             "reads_ok": self.reads_ok,
             "rebalance_bytes_moved": self.rebalance_bytes_moved,
             "rebalance_chunks_moved": self.rebalance_chunks_moved,
@@ -270,6 +282,15 @@ class DedupCluster:
     _session_seq: int = 0
     _pending_inval: list = field(default_factory=list)
     _default_session: object | None = field(default=None, repr=False)
+    # Fingerprints of waves that are SENT but not yet COMMITTED, keyed by
+    # batch txn. Under the Scheduler a session yields between ``_wave_send``
+    # and ``_wave_commit``, so a repair round can start inside that window;
+    # its refcount audit would otherwise see the wave's chunk refs with no
+    # committed recipe referencing them and decref live data. The registry
+    # is the host's own in-flight transaction knowledge (same authority as
+    # ``exclude_after``), not cross-node state. The synchronous write path
+    # runs all three phases back-to-back, so it is always empty there.
+    _inflight_wave_fps: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
         if self.transport is None:
@@ -313,6 +334,23 @@ class DedupCluster:
     def restart_node(self, nid: str) -> None:
         self.nodes[nid].restart()
 
+    def set_clock_skew(self, offsets: dict[str, int], guard: bool = True) -> int:
+        """Inject bounded per-node clock skew (ROADMAP item 4): each node's
+        local clock reads ``now + offsets.get(node_id, 0)``. With ``guard``
+        (the default, and what a deployment that KNOWS its skew bound would
+        configure) every node also widens its tombstone-reap horizon by the
+        bound ``max(|offset|)``, so the fastest clock in the fleet cannot
+        nominate a tombstone for reaping before its true age passes the GC
+        horizon. ``guard=False`` models the unguarded deployment — the
+        chaos schedule in tests/test_simclock.py shows a fast clock reaping
+        early and resurrecting a deleted object without it. Returns the
+        skew bound applied."""
+        max_skew = max((abs(v) for v in offsets.values()), default=0)
+        for nid, node in self.nodes.items():
+            node.clock_offset = offsets.get(nid, 0)
+            node.skew_guard = max_skew if guard else 0
+        return max_skew
+
     def tick(self, dt: int = 1) -> None:
         """Advance simulated time; land in-flight (duplicated/reordered)
         message copies, then drain async consistency queues."""
@@ -331,13 +369,19 @@ class DedupCluster:
         return removed
 
     # -------------------------------------------------- client sessions
-    def client(self, presence_cache: int = 0, wave_bytes: int = 0):
+    def client(
+        self, presence_cache: int = 0, wave_bytes: int = 0, src: str = "client"
+    ):
         """Open a ``DedupClient`` session on this cluster — the public
-        write/read surface (``put/put_many/get/delete/flush/close``)."""
+        write/read surface (``put/put_many/get/delete/flush/close``).
+        ``src`` names the session's transport endpoint: distinct names give
+        concurrent sessions their own per-edge accounting (the multi-tenant
+        workload opens ``c0..cN-1``); the default keeps every legacy edge
+        key byte-identical."""
         from repro.core.client import DedupClient
 
         return DedupClient(
-            self, presence_cache=presence_cache, wave_bytes=wave_bytes
+            self, presence_cache=presence_cache, wave_bytes=wave_bytes, src=src
         )
 
     def _default_client(self):
@@ -441,14 +485,22 @@ class DedupCluster:
 
     # ---------------------------------------------- coalesced batch write
     def _write_wave(self, wave: list, session=None) -> list[Fingerprint]:
-        """One coalesced write wave (unique object names).
+        """One coalesced write wave (unique object names), synchronously:
+        plan, send, commit back to back. This is the call-driven path every
+        legacy caller rides; the discrete-event scheduler drives the same
+        three phases through ``DedupClient.put_wave_actor`` with a yield
+        between send and commit so concurrent sessions interleave — both
+        paths produce the identical message sequence for a single session
+        (chunking emits no messages, so deferring commit past the next
+        wave's chunking changes nothing on the wire).
 
-        Three phases — plan (per object, in order: ingress, idempotence/
-        replace check, target placement, intra-batch dedup), send (ONE
-        ChunkOpBatch per target node for the whole wave), commit (per
-        object, in order: OmapPut; rollback + raise at the first failure,
-        releasing the refs of every not-yet-committed object so a retry of
-        the tail reproduces the serial outcome).
+        Three phases — ``_wave_plan`` (per object, in order: ingress,
+        idempotence/replace check, target placement, intra-batch dedup),
+        ``_wave_send`` (ONE ChunkOpBatch per target node for the whole
+        wave, plus the stale-presence byte-resend fallback),
+        ``_wave_commit`` (per object, in order: OmapPut; rollback + raise
+        at the first failure, releasing the refs of every not-yet-committed
+        object so a retry of the tail reproduces the serial outcome).
 
         ``session`` (a ``DedupClient``) hooks the presence cache in: a
         plan-time presence hit turns a would-ship-bytes op into a
@@ -461,6 +513,20 @@ class DedupCluster:
         the session's presence cache. ``session=None`` (or a session with
         the cache disabled) reproduces the legacy behavior exactly.
         """
+        state = self._wave_plan(wave, session)
+        self._wave_send(state, session)
+        return self._wave_commit(state, session)
+
+    def _wave_plan(self, wave: list, session=None) -> dict:
+        """Plan phase: per object, in order — txn allocation, ingress
+        transfer, idempotence/replace check, chunk target placement,
+        intra-batch first-writer dedup and presence elision. Returns the
+        wave state dict threaded through ``_wave_send``/``_wave_commit``:
+        ``plans``, ``planning_failure``, ``batch_txn``, ``src`` (the
+        session's transport endpoint) and ``committed`` (filled at commit:
+        ``(name, version)`` per committed object — the serialization
+        witness the concurrent-session oracle replays)."""
+        src = getattr(session, "src", "client")
         plans: list[dict] = []
         # (exc, obj size, counted in writes_failed) — a planning failure is
         # raised only after the objects planned before it have committed.
@@ -481,7 +547,7 @@ class DedupCluster:
                 )
                 break
             primary = omap_nodes[0]
-            self.transport.client_transfer(primary, len(data))
+            self.transport.client_transfer(primary, len(data), src=src)
             try:
                 self._fault("primary_selected", name=name, primary=primary, txn=txn)
                 prev = self._omap_lookup(name, src=primary, strict=True)
@@ -554,8 +620,23 @@ class DedupCluster:
                     "acked": {i: [] for i, _, _, _, _ in ops},
                 }
             )
+        return {
+            "plans": plans,
+            "planning_failure": planning_failure,
+            "batch_txn": self._txn_counter,
+            "src": src,
+            "committed": [],
+        }
 
-        # ---- send: one ChunkOpBatch per target node for the whole wave ----
+    def _wave_send(self, state: dict, session=None) -> None:
+        """Send phase: one ChunkOpBatch per target node for the whole wave,
+        then the stale-presence fallback resends. After this returns the
+        wave is IN FLIGHT: every chunk op is acked (or definitively not),
+        but no commit record exists yet — the window a scheduled session
+        yields in while other sessions run."""
+        plans = state["plans"]
+        src = state["src"]
+        batch_txn = state["batch_txn"]
         node_ops: dict[str, list[ChunkOp]] = {}
         node_refs: dict[str, list[tuple[int, int]]] = {}  # (plan idx, chunk idx)
         for pi, plan in enumerate(plans):
@@ -567,7 +648,6 @@ class DedupCluster:
                 for t in live:
                     node_ops.setdefault(t, []).append(op)
                     node_refs.setdefault(t, []).append((pi, i))
-        batch_txn = self._txn_counter
         fallback: dict[str, list[tuple[int, int]]] = {}
         for t, ops in node_ops.items():
             elided = sum(1 for op in ops if op.presence)
@@ -579,14 +659,14 @@ class DedupCluster:
                 fp_first=self.send_fingerprint_first,
             )
             try:
-                outcomes = self.transport.send("client", t, msg, self.now)
+                outcomes = self.transport.send(src, t, msg, self.now)
             except MessageDropped as e:
                 # Nothing acked on this node — but the ops may have applied
                 # ("ack lost"): a conditional cancel settles it receiver-side
                 # before the commit phase fails any object with an unacked
                 # chunk.
                 self._cancel_unconfirmed(
-                    "client", t, e, fps=tuple(op.fp for op in ops)
+                    src, t, e, fps=tuple(op.fp for op in ops)
                 )
                 continue
             except (NodeDown, TransactionAbort):
@@ -622,10 +702,10 @@ class DedupCluster:
                 ops=ops, txn=batch_txn, fp_first=self.send_fingerprint_first
             )
             try:
-                outcomes = self.transport.send("client", t, msg, self.now)
+                outcomes = self.transport.send(src, t, msg, self.now)
             except MessageDropped as e:
                 self._cancel_unconfirmed(
-                    "client", t, e, fps=tuple(op.fp for op in ops)
+                    src, t, e, fps=tuple(op.fp for op in ops)
                 )
                 continue
             except (NodeDown, TransactionAbort):
@@ -635,7 +715,51 @@ class DedupCluster:
                     plans[pi]["acked"][i].append(t)
                     session.presence_note(plans[pi]["fps"][i])
 
-        # ---- commit: per object, in order --------------------------------
+        # The wave is now in flight: its chunk refs exist on the owners but
+        # no commit record does. Register its fingerprints so a concurrently
+        # scheduled repair round's refcount audit defers them (exactly like
+        # ``exclude_after`` defers same-round writes); ``_wave_commit`` (or
+        # the actor's abort path) releases the registration.
+        pending = {
+            fp
+            for plan in plans
+            if plan["kind"] == "write"
+            for fp in plan["fps"]
+        }
+        if pending:
+            self._inflight_wave_fps[batch_txn] = pending
+
+    def release_inflight_wave(self, batch_txn: int) -> None:
+        """Drop a wave's in-flight audit registration (idempotent). Called
+        by ``_wave_commit`` on entry — commit runs without yield points, so
+        no audit can interleave past this — and by ``put_wave_actor``'s
+        abort path when a sent wave will never reach its commit."""
+        self._inflight_wave_fps.pop(batch_txn, None)
+
+    def inflight_audit_fps(self) -> set[Fingerprint]:
+        """Union of fingerprints in sent-but-uncommitted waves — the set a
+        refcount audit must treat as in-flight (see ``_inflight_wave_fps``)."""
+        out: set[Fingerprint] = set()
+        for fps in self._inflight_wave_fps.values():
+            out |= fps
+        return out
+
+    def _wave_commit(self, state: dict, session=None) -> list[Fingerprint]:
+        """Commit phase: per object, in order — OmapPut the commit record,
+        release the refs of the version the put actually displaced, roll
+        back and raise at the first failure. The displaced version comes
+        from the put's RESPONSE, not the plan-time lookup: with concurrent
+        sessions two replacers can both plan against the same previous
+        entry, and releasing the plan-time fetch would double-release the
+        refs of a version only one of them displaced. A write whose every
+        replica refused the put (version gate: a concurrent committer got
+        a newer version in first) is ``superseded``: its refs roll back,
+        it counts in ``writes_ok`` + ``writes_superseded``, and it never
+        enters ``state['committed']`` — exactly a committed write replaced
+        an instant later, minus the wire traffic."""
+        self.release_inflight_wave(state["batch_txn"])
+        plans = state["plans"]
+        planning_failure = state["planning_failure"]
         results: list[Fingerprint] = []
         failure: Exception | None = None
         for plan in plans:
@@ -669,7 +793,7 @@ class DedupCluster:
                 entry = OMAPEntry(
                     name, ofp, list(plan["fps"]), len(plan["data"]), plan["txn"]
                 )
-                wrote = self._commit_omap(primary, name, entry)
+                wrote, applied, prev = self._commit_omap(primary, name, entry)
                 if not wrote:
                     raise WriteError(f"no live OMAP target for {name!r} at commit")
             except (NodeDown, TransactionAbort, WriteError) as e:
@@ -678,15 +802,29 @@ class DedupCluster:
                 failure = WriteError(f"write {name!r} failed: {e}")
                 failure.__cause__ = e
                 continue
-            if plan["prev"] is not None:
-                # Release the replaced version's refs only now that the
-                # commit record is durably written (the OmapPut overwrote
-                # the old entry in place — no OmapDelete needed): a
-                # failure anywhere before this leaves the previous version
-                # fully intact. The new ops already took their refs, so
+            if not applied:
+                # Every replica's version gate refused the record: a
+                # concurrent session committed a newer version between our
+                # plan and commit. Superseded — roll back our refs (the
+                # winner's are the live ones) and report success.
+                self._rollback_refs(primary, plan["acked"], plan["ops"])
+                self.stats.writes_superseded += 1
+                self.stats.writes_ok += 1
+                results.append(ofp)
+                continue
+            if prev is not None and not prev.deleted:
+                # Release the refs of the version THIS put displaced —
+                # response-carried, so concurrent replacers each release a
+                # distinct version exactly once — only now that the commit
+                # record is durably written (the OmapPut overwrote the old
+                # entry in place — no OmapDelete needed): a failure
+                # anywhere before this leaves the previous version fully
+                # intact. A displaced TOMBSTONE took no refs (the delete
+                # released them). The new ops already took their refs, so
                 # shared chunks dip to N, not 0.
-                self._release_entry_refs(plan["prev"], src=primary)
+                self._release_entry_refs(prev, src=primary)
             self.stats.writes_ok += 1
+            state["committed"].append((name, plan["txn"]))
             results.append(ofp)
 
         if failure is not None:
@@ -701,27 +839,46 @@ class DedupCluster:
             raise planning_failure[0]
         return results
 
-    def _commit_omap(self, src: str, name: str, entry: OMAPEntry) -> bool:
-        """Write the commit record to every live OMAP replica; True when at
-        least one replica acked (the transaction commits). When NO replica
-        acks, any maybe-applied put is conditionally cancelled receiver-side
-        so a failed transaction cannot leave a committed-looking entry
-        behind — and because the OmapPut is idempotent and cancels are
-        conditional, a RETRIED commit neither double-applies nor rolls back
-        a replica that did commit: a replica that applied the first put
-        simply re-acks it from its seen-window."""
+    def _commit_omap(
+        self, src: str, name: str, entry: OMAPEntry
+    ) -> tuple[bool, bool, OMAPEntry | None]:
+        """Write the commit record to every live OMAP replica. Returns
+        ``(wrote, applied, prev)``: ``wrote`` — at least one replica acked
+        (the transaction commits); ``applied`` — at least one replica's
+        version gate accepted the record (False means a concurrent
+        committer superseded this write before it landed anywhere);
+        ``prev`` — the record the FIRST applying replica in placement
+        order displaced (entry or tombstone, None for a fresh name). The
+        first-in-placement-order choice matters: the primary is the
+        authority the plan-time lookup consulted, and a lagging replica
+        that missed an earlier replace would report a version whose refs
+        were already released — taking the earliest live replica's answer
+        keeps release exactly-once under both races and replica lag.
+
+        When NO replica acks, any maybe-applied put is conditionally
+        cancelled receiver-side so a failed transaction cannot leave a
+        committed-looking entry behind — and because the OmapPut is
+        idempotent and cancels are conditional, a RETRIED commit neither
+        double-applies nor rolls back a replica that did commit: a replica
+        that applied the first put simply re-acks it (response included:
+        the same (applied, prev) tuple) from its seen-window."""
         wrote = False
+        applied = False
+        prev: OMAPEntry | None = None
         unconfirmed: list[tuple[str, MessageDropped]] = []
         for t in self._live(self.omap_targets(name)):
             try:
-                self.transport.send(src, t, OmapPut(entry), self.now)
+                resp = self.transport.send(src, t, OmapPut(entry), self.now)
                 wrote = True
+                if not applied and isinstance(resp, tuple) and resp[0]:
+                    applied = True
+                    prev = resp[1]
             except MessageDropped as e:
                 unconfirmed.append((t, e))
         if not wrote:
             for t, e in unconfirmed:
                 self._cancel_unconfirmed(src, t, e, omap_name=name)
-        return wrote
+        return wrote, applied, prev
 
     def _cancel_unconfirmed(
         self,
@@ -844,7 +1001,8 @@ class DedupCluster:
                 raise NodeDown(primary)
             ofp = object_fp(fps)
             entry = OMAPEntry(name, ofp, list(fps), len(data), txn)
-            if not self._commit_omap(primary, name, entry):
+            wrote, applied, replaced = self._commit_omap(primary, name, entry)
+            if not wrote:
                 raise WriteError(f"no live OMAP target for {name!r} at commit")
         except (NodeDown, TransactionAbort, WriteError) as e:
             # Failed object transaction: best-effort rollback of the
@@ -853,11 +1011,21 @@ class DedupCluster:
             self.stats.writes_failed += 1
             raise WriteError(f"write {name!r} failed: {e}") from e
 
-        if prev is not None:
+        if not applied:
+            # Superseded by a concurrent committer's newer version: roll
+            # back our refs (the winner's stand) and report success — see
+            # ``_wave_commit`` for the semantics.
+            self._rollback_acked(primary, acked)
+            self.stats.writes_superseded += 1
+            self.stats.writes_ok += 1
+            return ofp
+        if replaced is not None and not replaced.deleted:
             # Committed (the OmapPut overwrote the old entry in place):
-            # release the replaced version's refs, exactly once. Any
-            # failure above left the previous version fully intact.
-            self._release_entry_refs(prev, src=primary)
+            # release the refs of the version this put actually displaced
+            # (response-carried — race-safe under concurrent replacers),
+            # exactly once. Any failure above left the previous version
+            # fully intact; a displaced tombstone took no refs.
+            self._release_entry_refs(replaced, src=primary)
         self.stats.writes_ok += 1
         return ofp
 
@@ -973,7 +1141,13 @@ class DedupCluster:
         entry = OMAPEntry(
             name, src.object_fp, list(src.chunk_fps), src.size, self._txn_counter
         )
-        if not self._commit_omap("client", name, entry):
+        wrote, applied, _replaced = self._commit_omap("client", name, entry)
+        if not wrote or not applied:
+            # Never acked, or superseded by a concurrent newer version:
+            # the caller falls back to a full write. (A by-ref write over
+            # an existing live name keeps the legacy leak-to-audit
+            # behavior for the displaced refs — callers write fresh
+            # checkpoint names.)
             _undo()
             return None
         self.stats.writes_ok += 1
@@ -1021,6 +1195,7 @@ class DedupCluster:
         against its recipe's layout fingerprint."""
         if not self.batch_reads:
             return [self._read_object_serial(n) for n in names]
+        src = getattr(session, "src", "client")
 
         # -- plan: OMAP probes grouped per (live-)primary node ------------
         by_primary: dict[str, list[int]] = {}
@@ -1030,7 +1205,7 @@ class DedupCluster:
         entries: list[OMAPEntry | None] = [None] * len(names)
         for primary in sorted(by_primary):
             for idx in by_primary[primary]:
-                entries[idx] = self._omap_lookup(names[idx], src="client")
+                entries[idx] = self._omap_lookup(names[idx], src=src)
         for name, entry in zip(names, entries):
             if entry is None:
                 raise ReadError(f"object {name!r} not found")
@@ -1077,7 +1252,7 @@ class DedupCluster:
                 self.stats.read_batches += 1
                 try:
                     reply = self.transport.send(
-                        "client", t, ChunkReadBatch(tuple(fps)), self.now
+                        src, t, ChunkReadBatch(tuple(fps)), self.now
                     )
                 except (MessageDropped, NodeDown) as e:
                     # The whole unicast failed: every fp it carried walks
@@ -1190,10 +1365,15 @@ class DedupCluster:
         txn = self._txn_counter
         self._fault("before_tombstone", name=name, txn=txn)
         committed = False
+        displaced: OMAPEntry | None = None
         unconfirmed: list[tuple[str, MessageDropped]] = []
         for t in omap_nodes:
             try:
-                self.transport.send(primary, t, OmapDelete(name, txn), self.now)
+                resp = self.transport.send(
+                    primary, t, OmapDelete(name, txn), self.now
+                )
+                if displaced is None and isinstance(resp, OMAPEntry):
+                    displaced = resp
                 committed = True
             except MessageDropped as e:
                 unconfirmed.append((t, e))
@@ -1206,10 +1386,23 @@ class DedupCluster:
                 )
             raise WriteError(f"delete {name!r}: no OMAP replica acked the tombstone")
         self._fault("before_delete_decref", name=name, txn=txn)
-        self._release_entry_refs(entry, src=primary)
-        # The recipe's refs are released: cached "exists" evidence for its
-        # chunks may go stale as soon as GC reclaims them — invalidate now.
-        self._invalidate_presence(primary, tuple(entry.chunk_fps), "delete")
+        # Release the refs of the entry the tombstone ACTUALLY displaced
+        # (response-carried by the first applying replica, like the write
+        # path's replace). The plan-time ``entry`` is stale the moment a
+        # concurrent session replaces or deletes the name between our
+        # lookup and our tombstone: a raced second delete sees prev =
+        # tombstone (refs already released — release nothing), a delete
+        # raced by a newer WRITE sees prev = that newer version only if
+        # our tombstone out-versioned it (then its refs are exactly the
+        # ones to drop). Either way: exactly-once.
+        if displaced is not None and not displaced.deleted:
+            self._release_entry_refs(displaced, src=primary)
+            # The recipe's refs are released: cached "exists" evidence for
+            # its chunks may go stale as soon as GC reclaims them —
+            # invalidate now.
+            self._invalidate_presence(
+                primary, tuple(displaced.chunk_fps), "delete"
+            )
         return True
 
     def _release_entry_refs(self, entry: OMAPEntry, src: str) -> None:

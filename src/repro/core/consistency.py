@@ -120,3 +120,12 @@ class ConsistencyManager:
 
     def pending(self) -> int:
         return len(self.queue)
+
+    def next_due(self) -> int | None:
+        """Earliest due-time among queued flips (None when idle) — the
+        scheduler's drain probe: run-to-quiescence keeps ticking until
+        every node's flip queue is empty, so 'quiet' means the flags are
+        settled, not merely that no actor is runnable."""
+        if not self.queue:
+            return None
+        return min(p.due for p in self.queue)

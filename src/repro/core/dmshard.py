@@ -177,18 +177,26 @@ class DMShard:
     def omap_put(self, entry: OMAPEntry) -> None:
         self.omap[entry.name] = entry
 
-    def omap_apply(self, entry: OMAPEntry) -> bool:
+    def omap_apply(self, entry: OMAPEntry) -> tuple[bool, OMAPEntry | None]:
         """Version-gated put: the cluster-monotonic commit-version authority
         rule applied receiver-side. The record lands only when it is at
         least as new as what the replica holds — so a DELAYED commit
         arriving after a newer replace or a newer tombstone cannot
         resurrect the old version, and a tombstone cannot clobber a
-        recreate it lost the race to. Returns whether the record landed."""
+        recreate it lost the race to. Returns ``(applied, replaced)``:
+        whether the record landed, and the record it replaced (entry or
+        tombstone, None when the name was absent or the put was refused).
+        The replaced record rides the commit's response so the SENDER can
+        release exactly the version its put displaced — under concurrent
+        sessions two replacers may both have planned against the same
+        previous version, and releasing the plan-time fetch twice would
+        corrupt refcounts; the response-carried record is released exactly
+        once, by the writer that actually displaced it."""
         cur = self.omap.get(entry.name)
         if cur is not None and cur.version > entry.version:
-            return False
+            return False, None
         self.omap[entry.name] = entry
-        return True
+        return True, cur
 
     def omap_get(self, name: str) -> OMAPEntry | None:
         return self.omap.get(name)

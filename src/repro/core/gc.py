@@ -19,6 +19,16 @@ replica lag the delete path tolerates: a node that rejoins after being
 down longer than the horizon may resurrect a reaped name — the standard
 anti-entropy tombstone trade-off, sized here at several times the chunk
 aging threshold.
+
+Tombstone aging is the one GC decision made against a *wall clock*
+(``deleted_at``), so it is the one place clock skew bites: a node whose
+clock runs fast nominates early, and under the wrong failure schedule
+that reaps before the true horizon (tests/test_simclock.py). Nodes with
+a configured skew bound (``StorageNode.skew_guard``, set by
+``DedupCluster.set_clock_skew``) widen their nomination threshold to
+``tombstone_horizon + skew_guard`` — see docs/concurrency.md. Under the
+discrete-event Scheduler (core/simclock.py) GC runs as a recurring
+actor interleaved with live client sessions.
 """
 
 from __future__ import annotations

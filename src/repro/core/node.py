@@ -102,6 +102,8 @@ class NodeStats:
     repairs_adopted: int = 0       # RepairChunk deliveries that stored bytes or a CIT entry
     audit_increfs: int = 0         # references an audit correction restored
     audit_decrefs: int = 0         # references an audit-tagged DecrefBatch released
+    decrefs_unbacked: int = 0      # releases of a ref this replica never kept
+                                   # (missed incref / cancelled ack-lost op)
     audit_flag_flips: int = 0      # stuck-INVALID flags an audit correction repaired
     tombstones_written: int = 0    # delete tombstone records committed/adopted
     tombstones_reaped: int = 0     # aged tombstones removed by TombstoneReap
@@ -134,6 +136,21 @@ class StorageNode:
     # tests, baselines) just serves every digest probe in full.
     cmap: object = None
     dirty: DirtyTracker = field(default_factory=DirtyTracker)
+    # Bounded clock skew (ROADMAP item 4). ``clock_offset`` is this node's
+    # local-clock error relative to event time: everything that would read a
+    # WALL clock in a real deployment — tombstone ``deleted_at`` stamping and
+    # tombstone aging — goes through ``local_now``. Message delivery order and
+    # version authority never consult it (versions are the cluster-monotonic
+    # txn counter, not timestamps). ``skew_guard`` is the deployment's skew
+    # BOUND: reap candidacy requires age past ``horizon + skew_guard``, so a
+    # clock up to that much fast cannot age a tombstone out before every
+    # correctly-clocked replica would agree it is reapable.
+    clock_offset: int = 0
+    skew_guard: int = 0
+
+    def local_now(self, now: int) -> int:
+        """This node's skewed local-clock reading at event time ``now``."""
+        return now + self.clock_offset
 
     def set_cmap(self, cmap, now: int) -> None:
         """Adopt a cluster-map share; a CHANGED map re-keys every placement
@@ -225,7 +242,7 @@ class StorageNode:
             return self.shard.omap_get(msg.name)
         if isinstance(msg, OmapPut):
             e = msg.entry
-            applied = self.shard.omap_apply(
+            applied, prev = self.shard.omap_apply(
                 OMAPEntry(
                     e.name, e.object_fp, list(e.chunk_fps), e.size, e.version,
                     e.deleted, e.deleted_at,
@@ -239,9 +256,14 @@ class StorageNode:
                 # Version gate: a delayed commit (or a repair racing a
                 # newer write) may not clobber a newer record or tombstone.
                 self.stats.stale_puts_refused += 1
-            return applied
+            # The replaced record rides the response so the committer can
+            # release the exact version it displaced (entry or tombstone) —
+            # the only race-safe source under concurrent replacers.
+            return applied, prev
         if isinstance(msg, OmapDelete):
-            applied, prev = self.shard.omap_tombstone(msg.name, msg.version, now)
+            applied, prev = self.shard.omap_tombstone(
+                msg.name, msg.version, self.local_now(now)
+            )
             if applied:
                 self.stats.tombstones_written += 1
                 self._mark_name_dirty(msg.name, now)
@@ -420,8 +442,22 @@ class StorageNode:
                         self.shard.omap_delete(msg.omap_name)
                     self._mark_name_dirty(msg.omap_name, now)
             else:
-                self.shard.omap_delete(msg.omap_name)
-                self._mark_name_dirty(msg.omap_name, now)
+                # Cancelled commit: the cached (applied, replaced) response
+                # says exactly what the put displaced — restore it. A put
+                # the version gate refused never landed, so there is
+                # nothing to undo; a put over a tombstone restores the
+                # tombstone (deleting the name outright would void the
+                # delete's resurrection guard).
+                applied, prev = (
+                    cached if isinstance(cached, tuple) and len(cached) == 2
+                    else (True, None)
+                )
+                if applied:
+                    if isinstance(prev, OMAPEntry):
+                        self.shard.omap_put(prev)
+                    else:
+                        self.shard.omap_delete(msg.omap_name)
+                    self._mark_name_dirty(msg.omap_name, now)
         outcomes = cached if isinstance(cached, (list, tuple)) else []
         for fp, outcome in zip(msg.fps, outcomes):
             if outcome != "miss":
@@ -467,7 +503,13 @@ class StorageNode:
             )
             tombs = None
             if not msg.groups and not msg.detail_all:
-                tombs = self.shard.aged_tombstones(now, self.gc.tombstone_horizon)
+                # Aging reads the node's LOCAL clock (the one real thing a
+                # deployment has), so the horizon is widened by the skew
+                # bound: a clock ``skew_guard`` fast still cannot nominate
+                # a tombstone before its true age reaches the horizon.
+                tombs = self.shard.aged_tombstones(
+                    self.local_now(now), self.gc.tombstone_horizon + self.skew_guard
+                )
             self.stats.groups_digested += len(summary)
             self.stats.groups_skipped += skipped
             return DigestReply(
@@ -571,6 +613,21 @@ class StorageNode:
         self._require_alive()
         entry = self.shard.cit_lookup(fp)
         if entry is None:
+            return
+        if entry.refcount == 0:
+            # A release for a reference this replica never kept: either it
+            # missed the incref while unreachable, or a TxnCancel already
+            # compensated an ack-lost application — yet the object COMMITTED
+            # on the replicas that did ack, so its later delete/replace
+            # releases on every placement target. The sender's recipe is the
+            # authority that the logical reference existed; locally there is
+            # nothing to release, and going negative would punish this
+            # replica for under-replication the refcount audit exists to
+            # repair (``refs_under``). Mirror the normal zero transition so
+            # the entry ages out through GC if nothing re-references it.
+            self.stats.decrefs_unbacked += 1
+            self._mark_chunk_dirty(fp, now)
+            self.shard.cit_set_flag(fp, INVALID, now)
             return
         rc = self.shard.cit_addref(fp, -1, now=now)
         self._mark_chunk_dirty(fp, now)

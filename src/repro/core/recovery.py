@@ -485,6 +485,21 @@ class RecoveryRound:
                     if d[5] >= self.exclude_after:
                         young.add(fp)
             self.report.audit_deferred += len(young)
+        # Sent-but-uncommitted waves (a Scheduler session yielded between
+        # its send and commit phases): their chunk mtimes can PREDATE the
+        # round start, so the epoch gate above misses them, yet their refs
+        # have no committed recipe — the recipe walk would misread them as
+        # leaked and decref live data. This is the coordinator's own
+        # in-flight transaction knowledge (same authority as
+        # ``exclude_after``), not cross-node state: the synchronous write
+        # path commits in the same call as its send, so the set is always
+        # empty outside scheduled runs.
+        inflight = getattr(c, "inflight_audit_fps", None)
+        if inflight is not None:
+            fresh = inflight() - young
+            if fresh:
+                young |= fresh
+                self.report.audit_deferred += len(fresh)
 
         decrefs: dict[str, list[Fingerprint]] = {}
         corrections: dict[str, list] = {}
@@ -633,6 +648,20 @@ class RepairDaemon:
         self.rounds_run += 1
         self.reports.append(r.report)
         return r.report
+
+    def actor(self, interval: int):
+        """This daemon as a discrete-event actor: one ``step()`` per
+        ``interval`` ticks, forever. Register on a Scheduler with
+        ``sched.spawn(daemon.actor(50), name="repair")`` — or use
+        ``sched.every(interval, daemon.step, name="repair")``, which is
+        the same shape; this helper exists so the daemon's cadence can
+        live with the daemon. Repair rounds then interleave with live
+        client sessions on the shared event heap (docs/concurrency.md)
+        instead of running only when a test harness remembers to call
+        ``step()`` between its own operations."""
+        while True:
+            self.step()
+            yield interval
 
 
 def run_recovery(cluster) -> RecoveryReport:

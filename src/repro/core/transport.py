@@ -579,13 +579,21 @@ class Transport:
         except Exception:
             self.late_delivery_errors += 1
 
-    def client_transfer(self, dst: str, nbytes: int) -> None:
-        """Object-ingress accounting: the client ships object bytes to a
+    def client_transfer(self, dst: str, nbytes: int, src: str = "client") -> None:
+        """Object-ingress accounting: a client ships object bytes to a
         primary OSS. Modeled as pure data transfer (no control message, no
         ack), exactly as in the pre-transport accounting; delivery policies
-        do not apply to the external client's ingress path."""
-        edge = self.edge("client", dst)
+        do not apply to the external client's ingress path. ``src`` names
+        the client endpoint — distinct per-session names (``c0``, ``c1``,
+        ...) give concurrent sessions their own ingress edges."""
+        edge = self.edge(src, dst)
         edge.payload_bytes += nbytes
         edge.wire_bytes += nbytes
         self.wire_bytes += nbytes
         self.net_bytes += nbytes
+
+    def in_flight_copies(self) -> int:
+        """Held (duplicated/reordered) copies not yet delivered — the
+        scheduler's quiescence probe: the simulation is quiet only when no
+        actor is runnable AND nothing is still on the wire."""
+        return len(self._held)

@@ -196,7 +196,14 @@ class WriteBackCache:
         (and its dirty bytes released), which is the streaming-overlap
         seam: wave k is on the wire while k+1 is being chunked. Chunking
         is lossless, so an object's chunk bytes equal its data bytes and
-        the bound can be checked before chunking."""
+        the bound can be checked before chunking.
+
+        ``DedupClient.put_wave_actor`` drives this generator from the
+        discrete-event Scheduler: resuming it chunks wave k+1 while wave
+        k's sends are still uncommitted (``stats.waves_overlapped``),
+        and the synchronous ``put_many`` path consumes it eagerly — the
+        two orders are message-identical because chunking emits no
+        messages (docs/concurrency.md)."""
         wave: list[tuple[str, bytes]] = []
         names_in_wave: set[str] = set()
         pending = 0

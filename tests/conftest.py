@@ -6,31 +6,22 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def assert_seen_window_margin(
-    cluster, capacity: int = 1024, fraction: float = 0.25
-) -> float:
+def assert_seen_window_margin(cluster, capacity: int = 1024) -> float:
     """Measured-margin seen-window pressure check for the chaos suites.
 
-    Eviction pressure must be zero (an evicted id re-opens the double-apply
-    window a late duplicate exploits), AND the peak occupancy must stay
-    under ``fraction`` of the window's ``capacity`` — a measured headroom
-    claim, not just "nothing fell out": a schedule that filled the window
-    to 99% would still pass a zero-eviction assert while one extra
-    in-flight message away from silent re-application.
-
-    Returns the measured margin (peak / capacity) so callers can report
-    it in their failure messages or print it under ``-s``.
+    Eviction pressure must be zero: an evicted id re-opens the double-apply
+    window a late duplicate exploits. Headroom itself is no longer asserted
+    against a fixed fraction here — the old 25%-of-capacity margin was a
+    guess, and the sizing study in ``bench_multi_tenant`` (benchmarks/
+    write_path_bench.py) now *measures* peak occupancy vs in-flight depth
+    and pins it as tolerance-0 bench-gate columns instead. A hard-coded
+    fraction in the test suite would either shadow that gate or drift from
+    it; the suite keeps only the correctness claim (zero evictions) and
+    returns the measured margin so callers can report it under ``-s``.
     """
     stats = cluster.stats
     assert stats.seen_evictions == 0, (
         f"seen-window evicted {stats.seen_evictions} ids — in-flight depth "
         f"exceeded the {capacity}-id bound; late duplicates may re-apply"
     )
-    high = stats.seen_high_water
-    budget = int(capacity * fraction)
-    assert high <= budget, (
-        f"seen-window peak occupancy {high} exceeds the stated margin "
-        f"{budget} ({fraction:.0%} of {capacity}): the schedule is "
-        f"{high / capacity:.1%} into the window, too close to eviction"
-    )
-    return high / capacity
+    return stats.seen_high_water / capacity

@@ -627,8 +627,8 @@ def test_stale_put_cannot_resurrect_tombstone():
     stale = c.nodes[targets[0]].shard.omap_get("x")
     assert c.delete_object("x")
     refused_before = sum(n.stats.stale_puts_refused for n in c.nodes.values())
-    applied = c.transport.send("client", targets[0], OmapPut(stale), c.now)
-    assert applied is False
+    applied, prev = c.transport.send("client", targets[0], OmapPut(stale), c.now)
+    assert applied is False and prev is None
     assert (
         sum(n.stats.stale_puts_refused for n in c.nodes.values())
         == refused_before + 1

@@ -1,0 +1,207 @@
+"""Scheduler determinism and clock-skew chaos schedules (core/simclock.py).
+
+The discrete-event core's contract is reproducibility: same seed, same
+event order, same stats, same final state — and a *different* seed is a
+different legal interleaving, not a different outcome after recovery.
+The skew tests prove the tombstone-reap guard (ROADMAP item 4) is
+load-bearing: a fast local clock reaps a tombstone before its true age
+passes the GC horizon, and a crashed replica rejoining with the old
+live entry resurrects the deleted object — unless every node widens its
+reap horizon by the skew bound.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkingSpec,
+    DedupCluster,
+    ReadError,
+    Scheduler,
+    SimClock,
+    name_fp,
+)
+from repro.core.placement import place
+
+CH = ChunkingSpec("fixed", 2048)
+
+
+# --------------------------------------------------------------- SimClock
+def test_simclock_is_monotonic_and_skew_bounded():
+    clk = SimClock(offsets={"oss0": 5, "oss1": -3})
+    assert clk.advance(4) == 4
+    assert clk.node_now("oss0") == 9
+    assert clk.node_now("oss1") == 1
+    assert clk.node_now("oss2") == 4       # no offset -> shared axis
+    assert clk.max_skew == 5
+    with pytest.raises(ValueError):
+        clk.advance(-1)
+
+
+# -------------------------------------------------------- actor mechanics
+def test_scheduler_runs_oneshot_actors_and_collects_results():
+    c = DedupCluster.create(2, replicas=1, chunking=CH)
+    sched = Scheduler(c, seed=1)
+    trace = []
+
+    def actor(tag, delays):
+        for d in delays:
+            trace.append((c.now, tag))
+            yield d
+        return tag
+
+    sched.spawn(actor("a", [2, 2]), name="a")
+    sched.spawn(actor("b", [1, 1, 1]), name="b")
+    results = sched.run()
+    assert results == {"a": "a", "b": "b"}
+    # every resume happened at the tick the actor asked for
+    assert [t for t, tag in trace if tag == "a"] == [0, 2]
+    assert [t for t, tag in trace if tag == "b"] == [0, 1, 2]
+    assert sched.errors == {}
+
+
+def test_recurring_actor_interleaves_but_does_not_keep_run_alive():
+    c = DedupCluster.create(2, replicas=1, chunking=CH)
+    sched = Scheduler(c, seed=1)
+    fires = []
+
+    def oneshot():
+        for _ in range(3):
+            yield 4
+
+    sched.spawn(oneshot(), name="work")
+    sched.every(3, lambda: fires.append(c.now), name="gc")
+    sched.run()
+    # the recurring actor fired while the one-shot was alive, then stopped
+    assert fires and all(t <= c.now for t in fires)
+    assert fires == sorted(fires)
+    n_at_quiesce = len(fires)
+    sched.run()  # nothing one-shot left: returns without spinning on "gc"
+    assert len(fires) == n_at_quiesce
+
+
+def test_duplicate_actor_name_rejected():
+    c = DedupCluster.create(2, replicas=1, chunking=CH)
+    sched = Scheduler(c, seed=0)
+    sched.spawn(iter(()), name="a")
+    with pytest.raises(ValueError):
+        sched.spawn(iter(()), name="a")
+
+
+def test_run_until_leaves_clock_at_target():
+    c = DedupCluster.create(2, replicas=1, chunking=CH)
+    sched = Scheduler(c, seed=0)
+    sched.run_until(17)
+    assert c.now == 17 and sched.clock.now == 17
+
+
+# ------------------------------------------------------------ determinism
+def _seeded_run(sched_seed, spec_seed=7):
+    from repro.core import WorkloadSpec, run_workload
+
+    c = DedupCluster.create(4, replicas=2, chunking=CH)
+    sched = Scheduler(c, seed=sched_seed)
+    spec = WorkloadSpec(
+        clients=6, objects=16, ops_per_client=6, seed=spec_seed,
+        bulk_first=2, wave_bytes=8192,
+    )
+    rep = run_workload(c, spec, scheduler=sched)
+    return c, sched, rep
+
+
+def test_same_seed_same_event_order_stats_and_state():
+    c1, s1, r1 = _seeded_run(3)
+    c2, s2, r2 = _seeded_run(3)
+    assert s1.event_log == s2.event_log
+    assert r1 == r2
+    assert c1.stats.snapshot() == c2.stats.snapshot()
+    omap1 = {
+        nid: {n: (e.version, e.deleted) for n, e in nd.shard.omap.items()}
+        for nid, nd in c1.nodes.items()
+    }
+    omap2 = {
+        nid: {n: (e.version, e.deleted) for n, e in nd.shard.omap.items()}
+        for nid, nd in c2.nodes.items()
+    }
+    assert omap1 == omap2
+
+
+def test_different_scheduler_seed_is_a_different_interleaving():
+    """Same workload spec, different tie-break seed: events at shared
+    ticks pop in a different order (the seeded tiebreak is live), while
+    each run stays internally consistent (own replay oracle matches —
+    covered in tests/test_workload.py)."""
+    _, s1, _ = _seeded_run(3)
+    _, s2, _ = _seeded_run(4)
+    assert [e[:2] for e in s1.event_log] != [e[:2] for e in s2.event_log]
+
+
+# ------------------------------------------------------------- clock skew
+def _skew_schedule(guard: bool):
+    """The reap-guard chaos schedule: replica B crashes holding live v1,
+    the delete lands a tombstone on A only, then A's clock steps forward
+    by ``skew`` (an NTP jump after stamping). At true age
+    ``horizon - skew + 1`` A's *local* clock says the horizon passed."""
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    data = np.random.default_rng(4).bytes(4096)
+    c.write_object("x", data)
+    c.tick(2)
+    a, b = place(name_fp("x"), c.cmap)[:2]
+    c.crash_node(b)
+    assert c.delete_object("x")
+    horizon = c.nodes[a].gc.tombstone_horizon
+    skew = 10
+    assert c.set_clock_skew({a: skew}, guard=guard) == skew
+    c.tick(horizon - skew + 1)      # true age < horizon; A perceives >= horizon
+    early = c.recover().tombstones_reaped
+    c.restart_node(b)
+    rejoin = c.recover()
+    live = {
+        nid: e
+        for nid, nd in c.nodes.items()
+        if (e := nd.shard.omap.get("x")) is not None and not e.deleted
+    }
+    return c, skew, horizon, early, rejoin, live
+
+
+def test_unguarded_fast_clock_reaps_early_and_resurrects():
+    """Without the guard the fast clock nominates the tombstone before
+    its true age reaches the horizon; full-ack is satisfied (the crashed
+    replica isn't a live target), the tombstone dies, and the rejoining
+    replica's stale live v1 — which the tombstone existed to beat —
+    repairs back onto the placement targets: the deleted object
+    resurrects, with its chunk refs already released to GC."""
+    c, skew, horizon, early, rejoin, live = _skew_schedule(guard=False)
+    assert early == 1
+    assert live, "expected the stale live entry to resurrect"
+    assert all(e.version == 1 for e in live.values())
+    with pytest.raises(ReadError):
+        c.read_object("x")          # bytes already reclaimed: data loss
+
+
+def test_skew_guard_blocks_early_reap_and_keeps_delete():
+    """With the guard every node widens its reap horizon by the skew
+    bound, so the fast clock cannot nominate early; the rejoining
+    replica's stale v1 loses to the still-alive tombstone v2 and the
+    name stays deleted. The guard only *delays* reaping: once true age
+    passes ``horizon + skew`` the tombstone is reaped on both replicas."""
+    c, skew, horizon, early, rejoin, live = _skew_schedule(guard=True)
+    assert early == 0
+    assert not live, "guarded schedule must not resurrect the delete"
+    with pytest.raises(ReadError):
+        c.read_object("x")
+    c.tick(skew + horizon)          # now past horizon + guard on every clock
+    assert c.recover().tombstones_reaped == 2
+    assert all("x" not in nd.shard.omap for nd in c.nodes.values())
+
+
+def test_scheduler_mirrors_cluster_skew():
+    c = DedupCluster.create(3, replicas=2, chunking=CH)
+    sched = Scheduler(c, seed=0)
+    assert sched.set_clock_skew({"oss0": 7, "oss1": -2}) == 7
+    assert sched.clock.offsets == {"oss0": 7, "oss1": -2}
+    assert c.nodes["oss0"].clock_offset == 7
+    assert c.nodes["oss0"].skew_guard == 7      # bound, not own offset
+    assert c.nodes["oss2"].skew_guard == 7
+    sched.run_until(5)
+    assert sched.clock.node_now("oss0") == 12

@@ -1,0 +1,319 @@
+"""Multi-tenant workload generator tests (core/workload.py).
+
+Three claims, in increasing strength:
+
+1. *Interleaving is real*: N sessions hold sent-but-uncommitted waves at
+   the same tick (the scheduler event log is the witness), and wave k+1
+   chunking overlaps wave k in flight (``stats.waves_overlapped``).
+2. *Parity*: a single cache-disabled session driven through the
+   scheduler is message-identical to the legacy call-driven path — the
+   refactor changed the execution model, not the protocol.
+3. *Convergence*: any seeded interleaving's final state equals a serial
+   replay of its version-sorted commit log (the split-brain oracle
+   extended to concurrent sessions), including under a chaos transport.
+"""
+
+import os
+import random
+
+import pytest
+
+from repro.core import (
+    ChunkingSpec,
+    DedupCluster,
+    ReadError,
+    Scheduler,
+    WorkloadSpec,
+    chaos,
+    reliable,
+    run_workload,
+)
+from repro.core.workload import _gen_client_ops, _block_pool
+
+CH = ChunkingSpec("fixed", 2048)
+
+
+def pytest_generate_tests(metafunc):
+    """Workload chaos schedules are seeded like the transport suites:
+    small fixed set locally, widened by the nightly job via
+    WORKLOAD_SCHEDULES / WORKLOAD_SEED_BASE (disjoint from the other
+    sweeps' seed ranges). A failing test id names the seed."""
+    if "workload_seed" in metafunc.fixturenames:
+        base = int(os.environ.get("WORKLOAD_SEED_BASE", "0"))
+        n = int(os.environ.get("WORKLOAD_SCHEDULES", "4"))
+        metafunc.parametrize("workload_seed", range(base, base + n))
+
+
+def _fresh(n=4, replicas=2, policy=None):
+    return DedupCluster.create(n, replicas=replicas, chunking=CH, policy=policy)
+
+
+def _spec(**kw):
+    base = dict(
+        clients=8, objects=24, ops_per_client=8, seed=5,
+        bulk_first=2, wave_bytes=8192,
+    )
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def _live_state(c):
+    """name -> bytes for every readable live object (reliable reads)."""
+    c.transport.policy = reliable()
+    out = {}
+    names = sorted({n for nd in c.nodes.values() for n in nd.shard.omap})
+    for name in names:
+        try:
+            out[name] = c.read_object(name)
+        except ReadError:
+            pass
+    return out
+
+
+def _replay_oracle(commit_log, n=4, replicas=2):
+    """Serial replay of the version-sorted commit log into a fresh
+    cluster: the serializable history every interleaving must equal."""
+    oc = _fresh(n, replicas)
+    for _version, kind, name, data in commit_log:
+        if kind == "put":
+            oc.write_object(name, data)
+        else:
+            oc.delete_object(name)
+    return oc
+
+
+# ---------------------------------------------------------- interleaving
+def test_eight_clients_interleave_with_waves_in_flight():
+    c = _fresh()
+    sched = Scheduler(c, seed=5)
+    rep = run_workload(c, _spec(), scheduler=sched)
+    assert rep["max_in_flight_sessions"] >= 2
+    # the event log itself shows >= 2 sessions in flight at one tick
+    assert any(len(labels) >= 2 for _, _, labels in sched.event_log)
+    # wave k+1 chunked while wave k was in flight (PR 8's serialization
+    # caveat, now pipelined)
+    assert c.stats.waves_overlapped >= 1
+    assert rep["totals"]["puts_ok"] >= 1 and rep["totals"]["gets_ok"] >= 1
+    assert rep["edges"]["busiest_edge_payload"] > 0
+    assert rep["edges"]["node_ingress_max"] > 0
+    # every client made progress and reported latency percentiles
+    for pc in rep["per_client"]:
+        assert pc["ops"] >= 1
+        assert pc["latency_p99_ticks"] >= pc["latency_p50_ticks"] >= 1
+
+
+def test_same_spec_seed_reproducible_report():
+    c1 = _fresh()
+    r1 = run_workload(c1, _spec())
+    c2 = _fresh()
+    r2 = run_workload(c2, _spec())
+    assert r1 == r2
+    assert c1.stats.snapshot() == c2.stats.snapshot()
+
+
+def test_seen_window_occupancy_tracks_in_flight_depth():
+    """The sizing study's test-side anchor: peak seen-window occupancy
+    grows with concurrent client count (more in-flight ids), evictions
+    stay zero throughout, and the 8-client peak keeps clear headroom in
+    the 1024-id window. The measured points themselves are pinned as
+    tolerance-0 columns by bench_multi_tenant."""
+    highs = {}
+    for nclients in (2, 4, 8):
+        c = _fresh()
+        run_workload(c, _spec(clients=nclients))
+        assert c.stats.seen_evictions == 0
+        highs[nclients] = c.stats.seen_high_water
+    assert highs[2] <= highs[4] <= highs[8]
+    assert highs[2] < highs[8], "occupancy must respond to concurrency"
+    assert highs[8] < 1024
+
+
+# ---------------------------------------------------------------- parity
+def test_single_session_actor_is_message_identical_to_sync():
+    """The refactor's pin: one cache-disabled session driven through the
+    scheduler produces byte-for-byte the same message counts, OMAP and
+    chunk stores as the legacy synchronous path. Overlap is the ONLY new
+    behavior (a counter, not a message)."""
+    rng = random.Random(9)
+    items = [(f"o{i}", rng.randbytes(3000 + 512 * (i % 5))) for i in range(12)]
+
+    c1 = _fresh()
+    s1 = c1.client(wave_bytes=8192)
+    fps_sync = s1.put_many(list(items))
+    s1.close()
+
+    c2 = _fresh()
+    s2 = c2.client(wave_bytes=8192)
+    sched = Scheduler(c2, seed=0)
+    sched.spawn(s2.put_wave_actor(list(items)), name="s", session=s2)
+    fps_actor, committed = sched.run()["s"]
+    s2.close()
+
+    assert fps_actor == fps_sync
+    assert [n for n, _ in committed] == [n for n, _ in items]
+    snap1, snap2 = c1.stats.snapshot(), c2.stats.snapshot()
+    overlapped = snap2.pop("waves_overlapped")
+    snap1.pop("waves_overlapped")
+    assert snap1 == snap2
+    assert overlapped >= 1
+    # advance the sync cluster through the same elapsed ticks so both
+    # flip queues drain, then require identical durable state
+    c1.tick(c2.now - c1.now)
+
+    def durable(c):
+        return {
+            nid: (
+                {n: (e.version, e.object_fp, tuple(e.chunk_fps))
+                 for n, e in nd.shard.omap.items()},
+                {fp: (e.refcount, e.flag) for fp, e in nd.shard.cit.items()},
+                dict(nd.chunk_store),
+            )
+            for nid, nd in c.nodes.items()
+        }
+
+    assert durable(c1) == durable(c2)
+
+
+# ----------------------------------------------------------- convergence
+@pytest.mark.parametrize("sched_seed", [3, 11, 25])
+def test_interleaving_converges_to_serial_replay(sched_seed):
+    """Split-brain oracle, concurrent edition: whatever interleaving the
+    seed produces, replaying the version-sorted commit log serially into
+    a fresh cluster reproduces the live state byte-identically after
+    recovery — commit authority is the version counter, not arrival
+    order."""
+    c = _fresh()
+    sched = Scheduler(c, seed=sched_seed)
+    rep = run_workload(c, _spec(), scheduler=sched)
+    c.recover()
+    oracle = _replay_oracle(rep["commit_log"])
+    assert _live_state(c) == _live_state(oracle)
+
+
+@pytest.mark.parametrize("sched_seed", range(4))
+def test_background_gc_and_repair_interleave_safely(sched_seed):
+    """Regression: a repair round scheduled inside a session's send→commit
+    window must not audit-decref the wave's not-yet-committed refs (the
+    chunk mtimes predate the round start, so the ``exclude_after`` epoch
+    gate alone misses them — the in-flight wave registry closes the gap).
+    Before the fix this died with a negative-refcount assertion in the
+    client's own later delete. Recurring GC + repair actors interleave
+    with 8 client sessions; no actor may error, and the result must still
+    converge to the serial replay oracle."""
+    c = _fresh()
+    sched = Scheduler(c, seed=sched_seed)
+    spec = _spec(gc_interval=5, repair_interval=7)
+    rep = run_workload(c, spec, scheduler=sched)
+    assert not sched.errors, sched.errors
+    assert not c._inflight_wave_fps, "in-flight registry leaked past the run"
+    c.recover()
+    oracle = _replay_oracle(rep["commit_log"])
+    assert _live_state(c) == _live_state(oracle)
+
+
+@pytest.mark.parametrize("sched_seed", range(3))
+def test_background_actors_survive_chaos(sched_seed):
+    """The chaos edition of the regression above, plus the ack-loss case:
+    a wave whose ChunkOpBatch ack is lost gets its unconfirmed replica
+    ref cancelled, yet the object commits on the replicas that acked —
+    so its later replace/delete releases a ref that replica never kept.
+    The receiver must treat that as the missed-incref divergence the
+    refcount audit repairs (``decrefs_unbacked``), not drive the count
+    negative and kill the client actor."""
+    c = _fresh(policy=chaos(seed=9 + sched_seed, p_drop=0.04, p_dup=0.04,
+                            p_reorder=0.04, p_ack_drop=0.04))
+    sched = Scheduler(c, seed=sched_seed)
+    spec = _spec(gc_interval=5, repair_interval=7)
+    rep = run_workload(c, spec, scheduler=sched)
+    assert not rep["actor_errors"], rep["actor_errors"]
+    assert not c._inflight_wave_fps
+    c.transport.policy = reliable()
+    c.recover()
+    r2 = c.recover()
+    assert r2.refs_over == 0 and r2.refs_under == 0
+
+
+def test_unbacked_decref_is_tolerated_not_negative():
+    """Direct unit form of the ack-loss release race: a replica whose
+    refcount is already zero receiving a DecrefBatch for a committed
+    recipe's chunk must no-op (counted in ``decrefs_unbacked``) and leave
+    the entry flagged for GC aging, because the sender's recipe — not the
+    under-replicated replica — is the authority the reference existed."""
+    c = _fresh()
+    c.write_object("obj", b"z" * 2048)
+    fp = next(fp for nd in c.nodes.values() for fp in nd.shard.cit)
+    owners = [nid for nid in c.nodes if fp in c.nodes[nid].shard.cit]
+    victim = c.nodes[owners[0]]
+    # Simulate the settled cancel: this replica compensated its ack-lost
+    # application, so its count is 0 while the recipe still commits.
+    victim.decref_chunk(fp, c.now)
+    assert victim.shard.cit_lookup(fp).refcount == 0
+    before = victim.stats.decrefs_unbacked
+    c.delete_object("obj")  # releases on every placement target
+    assert victim.stats.decrefs_unbacked == before + 1
+    assert victim.shard.cit_lookup(fp).refcount == 0
+
+
+def test_workload_chaos_sweep(workload_seed):
+    """Multi-client chaos: 6 sessions race puts/gets/deletes over a
+    lossy, duplicating, reordering transport. Committed-visibility and
+    integrity invariants must hold after recovery:
+
+    * every live object's bytes equal some value a client actually
+      generated for that name (no torn or cross-object merges);
+    * for each name, the cluster's version authority is at least the
+      highest version any client saw committed (commits are durable);
+    * a name whose highest committed record is a delete cannot be live
+      at that version or below (deletes don't silently undo);
+    * a second recovery round is a fixpoint.
+    """
+    spec = _spec(clients=6, ops_per_client=6, seed=workload_seed + 100)
+    c = _fresh(policy=chaos(seed=workload_seed, p_drop=0.06, p_dup=0.06,
+                            p_reorder=0.06, p_ack_drop=0.06))
+    rep = run_workload(c, spec)
+    assert not rep["actor_errors"], (
+        f"client actor died under chaos: {rep['actor_errors']} "
+        f"(repro: WORKLOAD_SEED_BASE={workload_seed} WORKLOAD_SCHEDULES=1)"
+    )
+    c.transport.policy = reliable()
+    c.recover()
+
+    # regenerate the deterministic op streams: every value any client
+    # could have written for each name
+    pool = _block_pool(spec)
+    valid = {}
+    for i in range(spec.clients):
+        for op in _gen_client_ops(spec, i, pool):
+            for name, data in op.items:
+                valid.setdefault(name, set()).add(data)
+    live = _live_state(c)
+    for name, data in live.items():
+        assert data in valid.get(name, set()), (
+            f"live {name!r} holds bytes no client generated "
+            f"(repro: WORKLOAD_SEED_BASE={workload_seed} WORKLOAD_SCHEDULES=1)"
+        )
+
+    def version_of(name):
+        return max(
+            (e.version for nd in c.nodes.values()
+             if (e := nd.shard.omap.get(name)) is not None),
+            default=0,
+        )
+
+    top = {}
+    for version, kind, name, _data in rep["commit_log"]:
+        top[name] = (version, kind)
+    for name, (version, kind) in sorted(top.items()):
+        assert version_of(name) >= version, (
+            f"committed v{version} {kind} of {name!r} lost "
+            f"(repro: WORKLOAD_SEED_BASE={workload_seed} WORKLOAD_SCHEDULES=1)"
+        )
+        if kind == "delete" and name in live:
+            assert version_of(name) > version, (
+                f"delete v{version} of {name!r} undone "
+                f"(repro: WORKLOAD_SEED_BASE={workload_seed})"
+            )
+
+    before = _live_state(c)
+    c.recover()
+    assert _live_state(c) == before, "second recovery round is not a fixpoint"
